@@ -1,0 +1,47 @@
+"""Roofline report rows from the dry-run + roofline result JSONs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+ROOFLINE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "roofline")
+
+
+def run(quick: bool = True):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append({
+            "bench": "dryrun", "arch": rec.get("arch"),
+            "shape": rec.get("shape"), "mesh": rec.get("mesh"),
+            "status": rec.get("status"),
+            "compile_s": rec.get("compile_s"),
+            "arg_bytes": (rec.get("memory") or {}).get("argument_bytes"),
+            "temp_bytes": (rec.get("memory") or {}).get("temp_bytes"),
+            "coll_bytes": (rec.get("collectives") or {}).get("total"),
+            "swa_variant": rec.get("swa_variant"),
+        })
+    for path in sorted(glob.glob(os.path.join(ROOFLINE_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            rows.append({"bench": "roofline", "arch": rec.get("arch"),
+                         "shape": rec.get("shape"), "status": "error"})
+            continue
+        rows.append({
+            "bench": "roofline", "arch": rec["arch"], "shape": rec["shape"],
+            "status": "ok", "t_compute_s": rec["t_compute_s"],
+            "t_memory_s": rec["t_memory_s"],
+            "t_collective_s": rec["t_collective_s"],
+            "dominant": rec["dominant"],
+            "useful_ratio": rec["useful_ratio"],
+        })
+    if not rows:
+        rows.append({"bench": "roofline", "status":
+                     "no dry-run artifacts yet; run repro.launch.dryrun"})
+    return rows

@@ -1,0 +1,65 @@
+"""Benchmark orchestrator: one module per paper table/figure + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV rows (plus per-benchmark
+detail columns).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale protocol (slower)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (convergence, fig1_stragglers, fig2_systems,
+                            fig3_faults, roofline_report, table1_mtl,
+                            table4_skew)
+    suites = {
+        "table1": table1_mtl, "table4": table4_skew,
+        "fig1": fig1_stragglers, "fig2": fig2_systems, "fig3": fig3_faults,
+        "convergence": convergence, "roofline": roofline_report,
+    }
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k in args.only}
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            continue
+        for row in rows:
+            us = row.get("us_per_call", 0.0)
+            derived = {k: v for k, v in row.items()
+                       if k not in ("bench", "us_per_call")}
+            print(f"{row.get('bench', name)},{_fmt(us)},"
+                  f"\"{json.dumps(derived, default=str)}\"")
+        all_rows.extend(rows)
+
+    # hard claims the paper makes -- fail loudly if the reproduction breaks
+    claims = [r for r in all_rows if "mtl_beats_local" in r]
+    bad = [r for r in claims if not (r["mtl_beats_local"]
+                                     and r["mtl_beats_global"])]
+    if claims and len(bad) > len(claims) // 2:
+        print(f"CLAIM-CHECK: MTL failed to win on {len(bad)}/{len(claims)} "
+              "datasets", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

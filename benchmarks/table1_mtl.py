@@ -1,0 +1,27 @@
+"""Table 1: average prediction error of global / local / MTL models on the
+three (synthetic-calibrated) federated datasets."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(quick: bool = True):
+    rows = []
+    rounds = 40 if quick else 80
+    shuffles = 2 if quick else common.SHUFFLES
+    for spec in common.dataset_specs(skewed=False):
+        res, us = common.timed(common.model_comparison, spec, rounds,
+                               shuffles)
+        for kind in ("global", "local", "mtl"):
+            rows.append({
+                "bench": "table1", "dataset": spec.name, "model": kind,
+                "err_mean": res[kind]["mean"], "err_stderr":
+                res[kind]["stderr"], "us_per_call": us,
+            })
+        # the paper's ordering: MTL < local and MTL < global
+        rows.append({
+            "bench": "table1", "dataset": spec.name, "model": "claim",
+            "mtl_beats_local": res["mtl"]["mean"] <= res["local"]["mean"],
+            "mtl_beats_global": res["mtl"]["mean"] <= res["global"]["mean"],
+        })
+    return rows

@@ -1,0 +1,72 @@
+"""Federated personalization: MOCHA per-task heads over a frozen backbone.
+
+Each of m simulated user devices has a small labeled dataset of token
+sequences; the backbone embeds them, and MOCHA learns coupled per-user
+classifiers + the task-relationship matrix Omega -- the paper's technique
+attached to a model-zoo architecture (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/personalize.py [--arch rwkv6-7b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import BudgetConfig, MochaConfig, Probabilistic
+from repro.core.personalization import PersonalizationBridge
+from repro.models.transformer import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--tasks", type=int, default=6)
+    ap.add_argument("--per-task", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # synthetic per-user data: each user prefers one of two token "topics";
+    # labels flag whether a sequence matches the user's topic
+    def make_task(t):
+        n, s = args.per_task, 32
+        topic = t % 2
+        labels = np.where(rng.random(n) < 0.5, 1.0, -1.0)
+        lo, hi = (0, cfg.vocab_size // 2) if topic == 0 else (
+            cfg.vocab_size // 2, cfg.vocab_size)
+        toks = np.zeros((n, s), np.int32)
+        for i in range(n):
+            if labels[i] > 0:
+                toks[i] = rng.integers(lo, hi, s)
+            else:
+                toks[i] = rng.integers(0, cfg.vocab_size, s)
+        return {"tokens": jnp.asarray(toks)}, jnp.asarray(labels)
+
+    batches, labels = zip(*[make_task(t) for t in range(args.tasks)])
+
+    bridge = PersonalizationBridge(
+        model, Probabilistic(lam=1e-3, sigma2=10.0),
+        MochaConfig(loss="smooth_hinge", rounds=60, omega_update_every=15,
+                    budget=BudgetConfig(passes=2.0, drop_prob=0.1),
+                    record_every=59))
+    fed = bridge.build_federation(params, batches, labels)
+    result = bridge.fit(fed)
+    print(f"arch={cfg.name}: {args.tasks} users personalized, "
+          f"gap={result.final('gap'):.4f}")
+
+    # in-sample accuracy per user (frozen backbone, convex heads)
+    for t in range(args.tasks):
+        margin = bridge.predict(params, batches[t], result.W[t])
+        acc = float(jnp.mean((jnp.sign(margin) == labels[t])))
+        print(f"  user {t}: train acc {acc:.2f}")
+    print("Omega (learned task coupling, rounded):")
+    print(np.round(np.asarray(result.omega), 2))
+
+
+if __name__ == "__main__":
+    main()

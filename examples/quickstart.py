@@ -1,0 +1,30 @@
+"""Quickstart: federated multi-task learning with MOCHA in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (BudgetConfig, MochaConfig, Probabilistic,
+                        per_task_error, run_mocha)
+from repro.data.synthetic import make_federation, HUMAN_ACTIVITY
+
+# 1. a federation: 30 mobile-phone nodes, non-IID unbalanced local data
+train, test = make_federation(HUMAN_ACTIVITY, seed=0)
+print(f"federation: m={train.m} nodes, d={train.d} features, "
+      f"n_t in [{int(train.n_t.min())}, {int(train.n_t.max())}]")
+
+# 2. MOCHA: per-node SVMs + learned task relationships, straggler-tolerant
+reg = Probabilistic(lam=1e-2, sigma2=10.0)
+cfg = MochaConfig(
+    loss="hinge", rounds=80, omega_update_every=20,
+    budget=BudgetConfig(passes=1.0, systems_lo=0.5, drop_prob=0.1),
+    network="lte", record_every=10)
+result = run_mocha(train, reg, cfg)
+
+# 3. inspect
+err = per_task_error(train, result.W, test.X, test.y, test.mask)
+print(f"final duality gap: {result.final('gap'):.4f}")
+print(f"simulated federated wall-clock: {result.final('time'):.1f}s (LTE)")
+print(f"avg test error across tasks: {float(np.mean(np.asarray(err))):.4f}")
+print(f"learned Omega diag (task self-affinity): "
+      f"{np.round(np.diagonal(result.omega)[:6], 3)}")

@@ -1,0 +1,60 @@
+"""End-to-end LM training driver on the synthetic token pipeline.
+
+Default is a CPU-sized model for a quick run; the production path is the
+same code under pjit (see repro/launch/train.py):
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~2 min CPU
+    PYTHONPATH=src python examples/train_lm.py --arch smollm-360m \
+        --steps 300 --seq 512 --batch 8    # the full ~360M config (slow)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.tokens import DataConfig, TokenStream
+from repro.models.transformer import build_model
+from repro.train.checkpoint import save
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    tc = TrainConfig(lr=3e-4)
+    params, opt_state = init_train_state(model, tc, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M")
+
+    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    stream = TokenStream(cfg, DataConfig(seq_len=args.seq,
+                                         batch_size=args.batch))
+    t0 = time.time()
+    for step, batch in enumerate(stream.batches(args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss={float(metrics['loss']):.4f}  "
+                  f"ce={float(metrics['ce']):.4f}  "
+                  f"gnorm={float(metrics['grad_norm']):.3f}  "
+                  f"{(time.time()-t0):.1f}s")
+    path = save(args.ckpt, args.steps, params)
+    print(f"checkpoint -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: MOCHA (Federated Multi-Task Learning, NIPS 2017) as a production
+JAX framework -- convex federated MTL core + a multi-architecture model zoo,
+training/serving substrates, and multi-pod launch tooling."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, get_config, list_configs, register
+from repro.configs.shapes import SHAPES, InputShape, get_shape

@@ -1,0 +1,17 @@
+"""MOCHA core: the paper's contribution as a composable JAX library."""
+from repro.core.dual import (DualState, FederatedData, compute_v,
+                             dual_objective, duality_gap, init_state,
+                             per_task_error, primal_objective, primal_weights,
+                             r_star)
+from repro.core.losses import (HINGE, LOGISTIC, LOSSES, SMOOTH_HINGE, SQUARED,
+                               Loss, get_loss)
+from repro.core.minibatch import (MiniBatchConfig, MiniBatchResult, run_mb_sdca,
+                                  run_mb_sgd)
+from repro.core.mocha import MochaConfig, RunResult, run_cocoa, run_mocha
+from repro.core.regularizers import (REGULARIZERS, Clustered, Graphical,
+                                     MeanRegularized, Probabilistic,
+                                     Regularizer, sigma_prime, spd_inverse)
+from repro.core.subproblem import (batched_local_sdca, local_sdca,
+                                   measure_theta, solve_exact,
+                                   subproblem_value)
+from repro.core.theta import BudgetConfig, round_budgets, validate_assumption2

@@ -1,0 +1,113 @@
+"""Primal/dual objectives, the w(alpha) map, and the duality gap for (1)/(3).
+
+Data layout (padded, vmap/shard_map friendly):
+    X     : (m, n_max, d)   X[t, i] = x_t^i  (row vectors)
+    y     : (m, n_max)
+    mask  : (m, n_max)      1.0 for real points, 0.0 for padding
+    alpha : (m, n_max)      dual variables (0 on padding)
+    v     : (m, d)          v_t = X_t^T alpha_t = sum_i alpha_t^i x_t^i
+
+With coupling Abar (m x m SPD) and K = Abar^{-1}:
+    R*(X alpha) = (1/4) tr(V^T K V)_{task-space} = (1/4) sum_tt' K_tt' <v_t, v_t'>
+    W(alpha)    = (1/2) K V          (rows w_t, shape (m, d))
+    D(alpha)    = sum_ti mask * l*(-alpha) + R*(X alpha)         [minimize]
+    P(W)        = sum_ti mask * l(x.w_t, y) + tr(W Abar W^T)     [minimize]
+    gap(alpha)  = P(W(alpha)) + D(alpha) >= 0, == 0 at optimum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+
+Array = jax.Array
+
+
+class FederatedData(NamedTuple):
+    """Padded per-task data for an m-node federated MTL problem."""
+
+    X: Array      # (m, n_max, d)
+    y: Array      # (m, n_max)
+    mask: Array   # (m, n_max)
+
+    @property
+    def m(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n_max(self) -> int:
+        return self.X.shape[1]
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[2]
+
+    @property
+    def n_t(self) -> Array:
+        return jnp.sum(self.mask, axis=1)
+
+    @property
+    def n_total(self) -> Array:
+        return jnp.sum(self.mask)
+
+
+class DualState(NamedTuple):
+    """MOCHA iterate: dual variables and the communicated v = X alpha blocks."""
+
+    alpha: Array  # (m, n_max)
+    v: Array      # (m, d)
+
+
+def init_state(data: FederatedData) -> DualState:
+    return DualState(
+        alpha=jnp.zeros_like(data.y),
+        v=jnp.zeros((data.m, data.d), data.X.dtype),
+    )
+
+
+def compute_v(data: FederatedData, alpha: Array) -> Array:
+    """v_t = sum_i alpha_t^i x_t^i  -- the only cross-node quantity."""
+    return jnp.einsum("tid,ti->td", data.X, alpha * data.mask)
+
+
+def primal_weights(K: Array, v: Array) -> Array:
+    """W(alpha) = (1/2) K V, rows are per-task weights w_t (m, d)."""
+    return 0.5 * K @ v
+
+
+def r_star(K: Array, v: Array) -> Array:
+    """R*(X alpha) = (1/4) sum_tt' K_tt' <v_t, v_t'>."""
+    return 0.25 * jnp.einsum("td,ts,sd->", v, K, v)
+
+
+def dual_objective(data: FederatedData, loss: Loss, K: Array,
+                   alpha: Array, v: Array) -> Array:
+    conj = loss.conjugate_neg(alpha, data.y) * data.mask
+    return jnp.sum(conj) + r_star(K, v)
+
+
+def primal_objective(data: FederatedData, loss: Loss, abar: Array,
+                     W: Array) -> Array:
+    z = jnp.einsum("tid,td->ti", data.X, W)
+    losses = loss.value(z, data.y) * data.mask
+    reg = jnp.einsum("td,ts,sd->", W, abar, W)
+    return jnp.sum(losses) + reg
+
+
+def duality_gap(data: FederatedData, loss: Loss, abar: Array, K: Array,
+                alpha: Array, v: Array) -> Array:
+    W = primal_weights(K, v)
+    return (primal_objective(data, loss, abar, W)
+            + dual_objective(data, loss, K, alpha, v))
+
+
+def per_task_error(data: FederatedData, W: Array,
+                   X_test: Array, y_test: Array, mask_test: Array) -> Array:
+    """Binary classification error per task (for Table 1/4 style reporting)."""
+    z = jnp.einsum("tid,td->ti", X_test, W)
+    wrong = (jnp.sign(z) != jnp.sign(y_test)) & (mask_test > 0)
+    cnt = jnp.maximum(jnp.sum(mask_test, axis=1), 1.0)
+    return jnp.sum(wrong, axis=1) / cnt

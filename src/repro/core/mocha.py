@@ -1,0 +1,151 @@
+"""MOCHA driver (Algorithm 1) plus the CoCoA special case.
+
+Outer loop alternates:
+  * federated W-update rounds: every node solves its data-local quadratic
+    subproblem approximately (per-node step budgets = theta_t^h), ships
+    Delta v_t = X_t^T Delta alpha_t, server reduces and recomputes W(alpha);
+  * a central Omega update (Appendix B.3), which needs only W, never the data.
+
+The per-round solver is jit-compiled once per (loss, max_steps); the Python
+loop orchestrates rounds, Omega refreshes, metric recording, and the simulated
+federated wall-clock (eq. 30).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dual as dual_mod
+from repro.core import systems_model
+from repro.core.dual import DualState, FederatedData
+from repro.core.losses import Loss, get_loss
+from repro.core.regularizers import Regularizer, sigma_prime
+from repro.core.subproblem import batched_local_sdca
+from repro.core.theta import BudgetConfig, round_budgets, validate_assumption2
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MochaConfig:
+    loss: str = "hinge"
+    rounds: int = 100                  # total federated W rounds
+    omega_update_every: int = 0        # 0 = fixed Omega; k = update every k rounds
+    gamma: float = 1.0                 # aggregation parameter (Remark 3: 1 is best)
+    per_task_sigma: bool = True        # Remark 5 per-task sigma'_t
+    budget: BudgetConfig = dataclasses.field(default_factory=BudgetConfig)
+    network: str = "lte"
+    seed: int = 0
+    record_every: int = 1
+
+
+@dataclasses.dataclass
+class RunResult:
+    W: np.ndarray            # (m, d) final per-task models
+    omega: np.ndarray        # (m, m)
+    state: DualState
+    history: Dict[str, List[float]]
+
+    def final(self, key: str) -> float:
+        return self.history[key][-1]
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _round(loss: Loss, max_steps: int, data: FederatedData, state: DualState,
+           K: Array, q_t: Array, budgets: Array, gamma: float, key: Array):
+    W = dual_mod.primal_weights(K, state.v)
+    keys = jax.random.split(key, data.m)
+    dalpha, u = batched_local_sdca(
+        loss, data.X, data.y, data.mask, state.alpha, W, q_t,
+        budgets, keys, max_steps)
+    return DualState(alpha=state.alpha + gamma * dalpha,
+                     v=state.v + gamma * u)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _metrics(loss: Loss, data: FederatedData, state: DualState,
+             abar: Array, K: Array):
+    dual_val = dual_mod.dual_objective(data, loss, K, state.alpha, state.v)
+    W = dual_mod.primal_weights(K, state.v)
+    primal_val = dual_mod.primal_objective(data, loss, abar, W)
+    return dual_val, primal_val, primal_val + dual_val
+
+
+def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
+              omega0: Optional[Array] = None,
+              budget_fn: Optional[Callable[[Array, Array, int], Array]] = None,
+              ) -> RunResult:
+    """Run Algorithm 1. ``budget_fn(key, n_t, round) -> (m,) int budgets``
+    overrides the BudgetConfig sampler (used by benchmark harnesses)."""
+    loss = get_loss(cfg.loss)
+    validate_assumption2(cfg.budget)
+    m = data.m
+    n_t = np.asarray(data.n_t)
+    omega = reg.init_omega(m) if omega0 is None else omega0
+    abar = reg.coupling(omega)
+    K = jnp.linalg.inv(abar)
+    sig = sigma_prime(K, cfg.gamma, per_task=cfg.per_task_sigma)
+    q_t = sig * jnp.diagonal(K) / 2.0 * jnp.ones((m,))
+
+    state = dual_mod.init_state(data)
+    max_steps = cfg.budget.max_steps(data.n_max)
+    net = systems_model.NETWORKS[cfg.network]
+    key = jax.random.PRNGKey(cfg.seed)
+
+    history: Dict[str, List[float]] = {
+        "round": [], "dual": [], "primal": [], "gap": [], "time": [],
+        "round_max_steps": []}
+    sim_time = 0.0
+
+    for h in range(cfg.rounds):
+        key, k_budget, k_round = jax.random.split(key, 3)
+        if budget_fn is not None:
+            budgets = budget_fn(k_budget, data.n_t, h)
+        else:
+            budgets = round_budgets(cfg.budget, k_budget, data.n_t)
+        budgets = jnp.minimum(budgets, max_steps)
+        state = _round(loss, max_steps, data, state, K, q_t, budgets,
+                       cfg.gamma, k_round)
+        history["round_max_steps"].append(int(np.asarray(budgets).max()))
+        sim_time += systems_model.round_time_sync(
+            np.asarray(budgets), data.d, net)
+
+        if cfg.omega_update_every and (h + 1) % cfg.omega_update_every == 0:
+            W = dual_mod.primal_weights(K, state.v)
+            omega = reg.update_omega(W, omega)
+            abar = reg.coupling(omega)
+            K = jnp.linalg.inv(abar)
+            sig = sigma_prime(K, cfg.gamma, per_task=cfg.per_task_sigma)
+            q_t = sig * jnp.diagonal(K) / 2.0 * jnp.ones((m,))
+            # NOTE: Omega changed => the dual problem changed. v = X alpha is
+            # Omega-independent; W(alpha) and the objectives pick up the new K.
+
+        if h % cfg.record_every == 0 or h == cfg.rounds - 1:
+            dual_val, primal_val, gap = _metrics(loss, data, state, abar, K)
+            history["round"].append(h)
+            history["dual"].append(float(dual_val))
+            history["primal"].append(float(primal_val))
+            history["gap"].append(float(gap))
+            history["time"].append(sim_time)
+
+    W = dual_mod.primal_weights(K, state.v)
+    return RunResult(W=np.asarray(W), omega=np.asarray(omega), state=state,
+                     history=history)
+
+
+def run_cocoa(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
+              omega0: Optional[Array] = None) -> RunResult:
+    """CoCoA baseline = MOCHA with a *uniform, fixed* approximation quality.
+
+    Every node runs ``passes`` full passes over its own local data each round
+    regardless of systems state (no clock cycle, no drops): the synchronous
+    round then waits for the slowest node (paper Sec. 3.4).
+    """
+    fixed = BudgetConfig(passes=cfg.budget.passes)  # strip heterogeneity knobs
+    cocoa_cfg = dataclasses.replace(cfg, budget=fixed, per_task_sigma=False)
+    return run_mocha(data, reg, cocoa_cfg, omega0=omega0)

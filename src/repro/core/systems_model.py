@@ -1,0 +1,77 @@
+"""Simulated federated wall-clock (paper eq. 30 / Appendix E).
+
+    Time(h, t) = FLOPs(h, t) / ClockRate(t) + Comm(h, t)
+
+Communication = latency + message_bytes / bandwidth, with network presets whose
+comm : comp ratios span roughly one to three orders of magnitude (3G / LTE /
+WiFi), matching the paper's simulation methodology.  The per-round time of a
+synchronous method is the max over participating nodes; MOCHA's global clock
+cycle instead *caps* the round and nodes fit their budget to it.
+
+All constants are explicit and documented so the benchmark is reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    name: str
+    latency_s: float       # per round-trip message
+    bandwidth_Bps: float   # bytes / second
+
+
+# Representative mobile-network figures (paper refs [52, 20, 48, 9, 38]).
+NETWORKS: Dict[str, Network] = {
+    "3g": Network("3g", latency_s=0.100, bandwidth_Bps=0.125e6),    # ~1 Mbit/s
+    "lte": Network("lte", latency_s=0.050, bandwidth_Bps=1.25e6),   # ~10 Mbit/s
+    "wifi": Network("wifi", latency_s=0.010, bandwidth_Bps=6.25e6), # ~50 Mbit/s
+}
+
+#: effective scalar throughput of a 2017-era mobile CPU on unvectorized
+#: double-precision SDCA updates (~100 MFLOP/s sustained; a 2 GHz core
+#: retires far fewer useful FLOPs on branchy scalar loops)
+CLOCK_FLOPS = 1.0e8
+
+#: FLOPs per SDCA coordinate step in d dimensions: dot(x, w) + q*dot(x, u)
+#: (2 * 2d), delta arithmetic (O(1)), u += delta x (2d) -> ~6d.
+SDCA_STEP_FLOPS = lambda d: 6.0 * d
+
+#: FLOPs per primal SGD example: grad dot + axpy -> ~4d.
+SGD_STEP_FLOPS = lambda d: 4.0 * d
+
+
+def comm_time(network: Network, msg_bytes: float) -> float:
+    return network.latency_s + msg_bytes / network.bandwidth_Bps
+
+
+def round_time_sync(step_counts: np.ndarray, d: int, network: Network,
+                    step_flops=SDCA_STEP_FLOPS,
+                    clock_flops: float = CLOCK_FLOPS) -> float:
+    """Synchronous round: server waits for the slowest participating node.
+
+    step_counts: (m,) local steps actually performed (0 = dropped; a dropped
+    node costs no compute but the round still pays one message slot, since the
+    server's clock cycle bounds the wait).
+    """
+    msg_bytes = 8.0 * d  # v_t up + w_t down, 4-byte floats each way
+    compute = step_counts.astype(np.float64) * step_flops(d) / clock_flops
+    return float(np.max(compute)) + comm_time(network, msg_bytes)
+
+
+def round_time_clock_cycle(step_counts: np.ndarray, d: int, network: Network,
+                           step_flops=SDCA_STEP_FLOPS,
+                           clock_flops: float = CLOCK_FLOPS) -> float:
+    """MOCHA round under a global clock cycle.
+
+    The central node fixes a deadline; every node fits its local work to it, so
+    the round costs the deadline (the max *feasible* compute among nodes that
+    used it) plus one communication slot.  Numerically this equals
+    ``round_time_sync`` -- the difference is *which* step_counts arise: MOCHA's
+    controller shrinks budgets instead of letting slow nodes run long.
+    """
+    return round_time_sync(step_counts, d, network, step_flops, clock_flops)

@@ -1,0 +1,84 @@
+"""Per-node per-round approximation controllers (theta_t^h, Section 3.4).
+
+The controller decides, each round, how many SDCA coordinate steps each node
+performs (its *budget* H_t).  theta_t^h is then an emergent quantity measured
+via Definition 1; budgets are the practical knob the paper describes ("the
+t-th node has a controller that may derive theta_t^h from the current clock
+cycle and statistical/systems setting").
+
+Three ingredients, composable:
+  * base work:    ``passes`` full passes over the local data (statistical knob)
+  * systems het.: budget ~ Uniform[lo_frac * n_min, hi_frac * n_min]   (App. E)
+  * faults:       with prob p_t^h the node drops -> budget 0 (theta = 1)
+
+Assumption 2 requires p_max < 1; ``validate_assumption2`` checks it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetConfig:
+    """Static straggler/fault model for a simulation run."""
+
+    passes: float = 1.0            # baseline: passes * n_t steps per round
+    systems_lo: Optional[float] = None   # e.g. 0.1 (high var) / 0.9 (low var)
+    systems_hi: Optional[float] = None   # typically 1.0
+    drop_prob: float = 0.0         # p_t^h, iid per node per round
+    never_send_node: Optional[int] = None  # Fig 3 green line: p_t := 1 forever
+
+    def max_steps(self, n_max: int) -> int:
+        """Static upper bound on per-round steps (fori_loop trip count)."""
+        return max(1, int(round(self.passes * n_max)))
+
+
+def round_budgets(cfg: BudgetConfig, key: Array, n_t: Array) -> Array:
+    """Sample per-node step budgets for one federated round.
+
+    n_t: (m,) real local dataset sizes. Returns int32 (m,) budgets.
+    """
+    m = n_t.shape[0]
+    k_sys, k_drop = jax.random.split(key)
+    base = jnp.round(cfg.passes * n_t).astype(jnp.int32)
+
+    if cfg.systems_lo is not None:
+        # paper App. E: updates ~ U[lo * n_min, hi * n_min]
+        n_min = jnp.min(n_t)
+        lo = cfg.systems_lo * n_min
+        hi = (cfg.systems_hi if cfg.systems_hi is not None else 1.0) * n_min
+        frac = jax.random.uniform(k_sys, (m,))
+        base = jnp.round(lo + frac * (hi - lo)).astype(jnp.int32)
+        base = jnp.minimum(base, jnp.round(cfg.passes * n_t).astype(jnp.int32))
+
+    budgets = jnp.maximum(base, 1)
+
+    if cfg.drop_prob > 0.0:
+        dropped = jax.random.bernoulli(k_drop, cfg.drop_prob, (m,))
+        budgets = jnp.where(dropped, 0, budgets)
+
+    if cfg.never_send_node is not None:
+        budgets = budgets.at[cfg.never_send_node].set(0)
+
+    return budgets
+
+
+def validate_assumption2(cfg: BudgetConfig) -> None:
+    """Assumption 2: p_max < 1 (every node sends with non-zero probability)."""
+    if cfg.drop_prob >= 1.0:
+        raise ValueError(
+            f"drop_prob={cfg.drop_prob} violates Assumption 2 (p_max < 1); "
+            "MOCHA is not guaranteed (or expected) to converge.")
+    if cfg.never_send_node is not None:
+        # Permitted for the Fig-3 ablation, but flag it loudly.
+        import warnings
+        warnings.warn(
+            "never_send_node set: node drops every round (p_t = 1). This "
+            "violates Assumption 2 and MOCHA will converge to the wrong "
+            "solution, as in Fig. 3 (green dotted line).", stacklevel=2)

@@ -1,0 +1,52 @@
+"""Task sharding for the federated MTL runtime.
+
+MOCHA's m federated nodes map onto the mesh ``data`` axis: each shard owns a
+contiguous block of tasks and runs their local dual solvers. The task count is
+padded to a multiple of the shard count with empty (mask = 0) tasks, which the
+solver provably never touches (budget masking + n_t = 0 guards).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dual import DualState, FederatedData
+
+Array = jax.Array
+
+
+def pad_tasks(data: FederatedData, shards: int) -> Tuple[FederatedData, int]:
+    """Pad the task axis to a multiple of ``shards``. Returns (data, m_pad)."""
+    m = data.m
+    m_pad = ((m + shards - 1) // shards) * shards
+    if m_pad == m:
+        return data, m
+    extra = m_pad - m
+    pad = lambda a: jnp.concatenate(
+        [a, jnp.zeros((extra,) + a.shape[1:], a.dtype)], axis=0)
+    return FederatedData(X=pad(data.X), y=pad(data.y), mask=pad(data.mask)), m
+
+
+def pad_task_matrix(K: Array, m_pad: int) -> Array:
+    """Embed the m x m coupling inverse into m_pad x m_pad.
+
+    Padding tasks get identity diagonal (any SPD value works: their alpha and
+    v stay identically zero, so the K entries multiply zeros everywhere).
+    """
+    m = K.shape[0]
+    if m_pad == m:
+        return K
+    out = jnp.eye(m_pad, dtype=K.dtype)
+    return out.at[:m, :m].set(K)
+
+
+def pad_vector(x: Array, m_pad: int, fill: float = 0.0) -> Array:
+    m = x.shape[0]
+    if m_pad == m:
+        return x
+    pad_shape = (m_pad - m,) + x.shape[1:]
+    return jnp.concatenate(
+        [x, jnp.full(pad_shape, fill, x.dtype)], axis=0)

@@ -1,0 +1,3 @@
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ops import decode_mha
+from repro.kernels.decode_attention.ref import decode_attention_ref

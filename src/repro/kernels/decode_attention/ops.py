@@ -1,0 +1,23 @@
+"""jit'd wrapper: GQA-aware decode attention entry point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention
+
+
+def decode_mha(q, k, v, lengths, interpret=None):
+    """q: (B, 1, H, D); k/v cache: (B, T, Hkv, D); lengths: (B,)."""
+    b, _, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = decode_attention(q[:, 0].transpose(0, 1, 2),
+                           k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                           lengths, interpret=interpret)
+    return out[:, None]

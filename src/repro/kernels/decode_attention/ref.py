@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for single-token decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (B, H, D); k/v: (B, H, T, D); lengths: (B,)."""
+    b, h, d = q.shape
+    t = k.shape[2]
+    scale = 1.0 / d ** 0.5
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(t)[None, None, :]
+    s = jnp.where(pos < lengths[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,30 @@
+"""jit'd public wrapper: GQA-aware flash attention entry point.
+
+``flash_mha(q, k, v)`` accepts (B, S, H, D) activations with separate kv
+head counts (GQA/MQA), broadcasts kv, and dispatches to the Pallas kernel
+(interpret mode on CPU, compiled Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, window: int | None = None,
+              interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, H, D); k/v: (B, S, Hkv, D). Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal,
+                          window=window, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.sdca.ops import draw_coordinates, kernel_local_sdca
+from repro.kernels.sdca.ref import sdca_ref
+from repro.kernels.sdca.sdca import sdca_local_solve

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SDCA kernel: repro.core.subproblem.local_sdca
+driven with an explicit coordinate sequence (hinge loss)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdca_ref_one(X, y, mask, alpha, w, q, budget, idx):
+    """Single task with explicit coordinate order idx (max_steps,)."""
+    n, d = X.shape
+    xnorm = jnp.sum(X * X, axis=-1)
+
+    def body(s, carry):
+        dalpha, u = carry
+        i = idx[s]
+        x = X[i]
+        a = alpha[i] + dalpha[i]
+        g_dot_x = jnp.dot(x, w + q * u)
+        qxx = q * xnorm[i]
+        abar = a * y[i]
+        step = (1.0 - y[i] * g_dot_x) / jnp.maximum(qxx, 1e-12)
+        abar_new = jnp.clip(abar + step, 0.0, 1.0)
+        live = ((s < budget) & (mask[i] > 0.0)).astype(jnp.float32)
+        delta = (abar_new - abar) * y[i] * live
+        return dalpha.at[i].add(delta), u + delta * x
+
+    return jax.lax.fori_loop(0, idx.shape[0], body,
+                             (jnp.zeros(n), jnp.zeros(d)))
+
+
+def sdca_ref(X, y, mask, alpha, W, q_t, budgets, idx):
+    return jax.vmap(sdca_ref_one)(X, y, mask, alpha, W, q_t, budgets, idx)

@@ -1,0 +1,129 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# This is dry-run-only; tests and benches see the single real CPU device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) this lowers + compiles the real
+step function (train_step / prefill / decode_step) against ShapeDtypeStruct
+inputs with production shardings, then records:
+
+  * memory_analysis()  -- per-device argument/output/temp bytes (fits check)
+  * cost_analysis()    -- HLO FLOPs + bytes accessed
+  * collective bytes   -- parsed from the optimized HLO (hlo_stats)
+  * compile wall time
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+report (launch/roofline.py) and EXPERIMENTS.md read from there.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--jobs ...]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.archs import ALL_ARCHS
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_stats import collective_bytes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    from repro.launch.specs import build_case  # after XLA_FLAGS
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "status": "error"}
+    t0 = time.time()
+    try:
+        from repro.utils.pjit_utils import activation_sharding
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        case = build_case(arch, shape_name, mesh)
+        record["kind"] = case["kind"]
+        record["swa_variant"] = case["variant"]
+        with mesh, activation_sharding(mesh, case["batch_axes"]):
+            jitted = jax.jit(case["fn"],
+                             in_shardings=case["in_shardings"],
+                             out_shardings=case["out_shardings"],
+                             donate_argnums=case["donate"])
+            lowered = jitted.lower(*case["args"])
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        record.update(
+            status="ok",
+            lower_s=t_lower - t0,
+            compile_s=t_compile - t_lower,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            cost={"flops": cost.get("flops"),
+                  "bytes_accessed": cost.get("bytes accessed"),
+                  "transcendentals": cost.get("transcendentals")},
+            collectives=coll,
+        )
+        print(f"[dryrun] OK  {tag}  compile={record['compile_s']:.1f}s "
+              f"arg={record['memory']['argument_bytes']} "
+              f"temp={record['memory']['temp_bytes']} "
+              f"coll={coll['total']:.3g}B")
+    except Exception as e:  # noqa: BLE001 -- record and continue the matrix
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {tag}: {record['error'][:200]}")
+    record["total_s"] = time.time() - t0
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cases = [(a, s) for a in ALL_ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cases = [(args.arch, args.shape)]
+
+    failures = 0
+    for multi_pod in meshes:
+        for arch, shape in cases:
+            rec = run_case(arch, shape, multi_pod, args.out, args.force)
+            failures += rec["status"] != "ok"
+    print(f"[dryrun] done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

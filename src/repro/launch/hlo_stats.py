@@ -1,0 +1,72 @@
+"""Parse optimized HLO text for collective operand/result bytes.
+
+``compiled.cost_analysis()`` has no collective traffic term, so the roofline's
+third term comes from summing the result-tensor sizes of every collective op
+in the optimized module (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, including their -start async forms).
+
+Caveat (DESIGN.md §6): ops inside a while-loop body are counted once; the
+roofline uses depth-differencing to recover true totals under
+scan-over-layers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result bytes per collective kind over the whole module text.
+
+    ``total_bf16_equiv`` corrects a CPU-backend artifact: XLA's CPU pipeline
+    legalizes bf16 arithmetic to f32 (verified: ``convert_convert_fusion``
+    feeding every large all-gather even with bf16-resident params), so
+    collectives that would move bf16 on a TPU appear as f32 here.  The
+    equivalent-on-TPU total halves the f32 collective bytes; genuinely-f32
+    traffic in the bf16 programs is limited to small softmax/stat reductions.
+    """
+    out: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    f32_bytes = 0.0
+    other_bytes = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_type, kind, _ = m.groups()
+        nbytes = _shape_bytes(result_type)
+        out[kind] += nbytes
+        out["count"] += 1
+        if "f32[" in result_type and "bf16[" not in result_type:
+            f32_bytes += nbytes
+        else:
+            other_bytes += nbytes
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["total_bf16_equiv"] = f32_bytes / 2.0 + other_bytes
+    return out

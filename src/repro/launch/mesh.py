@@ -1,0 +1,26 @@
+"""Production meshes (functions, not module constants: importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e meshes: one pod = 16 x 16 = 256 chips; multi-pod adds a
+    leading ``pod`` data-parallel axis across 2 pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh (('pod','data') or ('data',))."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("pod", "data"))
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CI on forced host devices."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

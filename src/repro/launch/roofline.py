@@ -1,0 +1,233 @@
+"""Roofline analysis (deliverable g).
+
+Per (arch x shape) on the single-pod mesh, derive the three roofline terms:
+
+    t_compute    = FLOPs / peak_flops          (per chip; HLO is per-device)
+    t_memory     = bytes_accessed / hbm_bw
+    t_collective = collective_bytes / ici_bw
+
+Methodology (DESIGN.md §6): production step functions scan over layers and
+XLA's HLO cost analysis counts a while-body once (measured), so full-depth
+costs are recovered by *depth differencing*: compile the same step at depth
+L1 and L2 (python-loop layers, no scan), then
+
+    per_layer = (C(L2) - C(L1)) / (L2 - L1);  fixed = C(L1) - L1*per_layer
+    C(L) = fixed + L * per_layer
+
+Zamba2 differences whole shared-attention *periods*.  MODEL_FLOPS = 6*N*D
+(dense) or 6*N_active*D (MoE) gives the usefulness ratio; for decode steps
+MODEL_FLOPS = 2*N*(new tokens) + attention-readout FLOPs.
+
+Run:  PYTHONPATH=src python -m repro.launch.roofline [--arch A --shape S]
+writes results/roofline/<arch>__<shape>.json and prints the table.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+from typing import Dict, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig, get_config
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch.hlo_stats import collective_bytes
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e (assignment constants)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s/link
+CHIPS = 256
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "roofline")
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter / FLOP model
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ArchConfig) -> Tuple[float, float]:
+    """(total params, active-per-token params)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    if cfg.block_type == "attention":
+        attn = d * cfg.attn_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim \
+            + cfg.attn_dim * d
+        if cfg.is_moe:
+            ffn_one = 3 * d * f if cfg.mlp in ("swiglu", "geglu") else 2 * d * f
+            ffn_total = cfg.n_experts * ffn_one + d * cfg.n_experts
+            ffn_active = cfg.top_k * ffn_one + d * cfg.n_experts
+        else:
+            ffn_total = ffn_active = (3 * d * f if cfg.mlp in
+                                      ("swiglu", "geglu") else 2 * d * f)
+        layer_total, layer_active = attn + ffn_total, attn + ffn_active
+        layers_total = cfg.n_layers * layer_total
+        layers_active = cfg.n_layers * layer_active
+    elif cfg.block_type == "rwkv6":
+        tm = 5 * d * d + d * (cfg.rwkv_lora_decay + 5 * cfg.rwkv_lora_mix) * 2
+        cm = d * f + f * d + d * d
+        layers_total = layers_active = cfg.n_layers * (tm + cm)
+    else:  # mamba2 / zamba2 hybrid
+        d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+        gn = cfg.ssm_groups * cfg.ssm_state
+        mamba = d * (2 * d_inner + 2 * gn + cfg.ssm_heads) + d_inner * d
+        layers = cfg.n_layers * mamba
+        if cfg.shared_attn_period:
+            shared = (d * cfg.attn_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim
+                      + cfg.attn_dim * d + 3 * d * f)
+            n_apps = cfg.n_layers // cfg.shared_attn_period
+            layers += shared + n_apps * 2 * d * d  # unshared projections
+            # weight reuse: active compute counts every application
+            layers_active = layers + (n_apps - 1) * shared
+        else:
+            layers_active = layers
+        layers_total = layers
+    embed = v * d * (cfg.n_codebooks if cfg.family == "audio" else 1)
+    head = 0 if cfg.tie_embeddings else d * v * (
+        cfg.n_codebooks if cfg.family == "audio" else 1)
+    return layers_total + embed + head, layers_active + embed + head
+
+
+def model_flops(cfg: ArchConfig, shape_name: str) -> float:
+    """Useful FLOPs for the step (global, all chips)."""
+    shape = get_shape(shape_name)
+    total, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence + attention readout over the cache
+    tokens = shape.global_batch
+    flops = 2.0 * active * tokens
+    if cfg.block_type == "attention" or cfg.shared_attn_period:
+        window = cfg.sliding_window or shape.seq_len
+        kv = min(window, shape.seq_len)
+        n_attn = (cfg.n_layers if cfg.block_type == "attention"
+                  else cfg.n_layers // cfg.shared_attn_period)
+        flops += (4.0 * tokens * n_attn * cfg.n_heads * cfg.head_dim * kv)
+    return flops
+
+
+# ---------------------------------------------------------------------------
+# depth differencing
+# ---------------------------------------------------------------------------
+
+def _depths(cfg: ArchConfig) -> Tuple[int, int]:
+    if cfg.shared_attn_period:
+        return cfg.shared_attn_period, 2 * cfg.shared_attn_period
+    return 1, 2
+
+
+def _shallow(cfg: ArchConfig, n_layers: int) -> ArchConfig:
+    return dataclasses.replace(cfg, n_layers=n_layers, scan_layers=False,
+                               name=f"{cfg.name}-L{n_layers}")
+
+
+def _measure(cfg: ArchConfig, shape_name: str, mesh) -> Dict[str, float]:
+    """Lower+compile one config, return per-device cost terms."""
+    from repro.launch import specs as sp
+    from repro.utils.pjit_utils import activation_sharding
+    shape = get_shape(shape_name)
+    case = sp.build_case_from_cfg(cfg, shape_name, mesh)
+    with mesh, activation_sharding(mesh, case["batch_axes"]):
+        compiled = jax.jit(case["fn"], in_shardings=case["in_shardings"],
+                           out_shardings=case["out_shardings"],
+                           donate_argnums=case["donate"]
+                           ).lower(*case["args"]).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            # TPU-equivalent wire bytes (see hlo_stats CPU-backend note)
+            "coll": float(coll["total_bf16_equiv"]),
+            "coll_raw": float(coll["total"])}
+
+
+def measure_full_depth(arch: str, shape_name: str, mesh=None
+                       ) -> Dict[str, float]:
+    """Depth-differenced per-device cost terms at the real layer count."""
+    from repro.launch.specs import resolve_arch_for_shape
+    cfg, variant = resolve_arch_for_shape(arch, shape_name)
+    mesh = mesh or make_production_mesh()
+    l1, l2 = _depths(cfg)
+    c1 = _measure(_shallow(cfg, l1), shape_name, mesh)
+    c2 = _measure(_shallow(cfg, l2), shape_name, mesh)
+    out = {"swa_variant": variant}
+    for key in ("flops", "bytes", "coll", "coll_raw"):
+        per = (c2[key] - c1[key]) / (l2 - l1)
+        fixed = c1[key] - l1 * per
+        out[key] = max(0.0, fixed + cfg.n_layers * per)
+        out[key + "_per_layer"] = per
+        out[key + "_fixed"] = fixed
+    return out
+
+
+def roofline_terms(arch: str, shape_name: str, costs: Dict[str, float]
+                   ) -> Dict[str, float]:
+    from repro.launch.specs import resolve_arch_for_shape
+    cfg, _ = resolve_arch_for_shape(arch, shape_name)
+    t_comp = costs["flops"] / PEAK_FLOPS
+    t_mem = costs["bytes"] / HBM_BW
+    t_coll = costs["coll"] / ICI_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    mf = model_flops(cfg, shape_name)
+    hlo_global = costs["flops"] * CHIPS
+    return {
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+    }
+
+
+def run_one(arch: str, shape_name: str, out_dir: str = RESULTS_DIR,
+            force: bool = False) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    record = {"arch": arch, "shape": shape_name}
+    try:
+        costs = measure_full_depth(arch, shape_name)
+        record.update(costs)
+        record.update(roofline_terms(arch, shape_name, costs))
+        record["status"] = "ok"
+        print(f"[roofline] {arch:24s} {shape_name:12s} "
+              f"comp={record['t_compute_s']:.3e}s mem={record['t_memory_s']:.3e}s "
+              f"coll={record['t_collective_s']:.3e}s -> {record['dominant']} "
+              f"useful={record['useful_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[roofline] FAIL {arch} {shape_name}: {record['error'][:160]}")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    from repro.configs.archs import ALL_ARCHS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ALL_ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            run_one(a, s, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

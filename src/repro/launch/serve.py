@@ -1,0 +1,63 @@
+"""Serving launcher: batched generate on a selected architecture.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --local
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b --dry-run \
+        --shape decode_32k
+"""
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_case
+        rec = run_case(args.arch, args.shape, args.multi_pod, force=True)
+        raise SystemExit(0 if rec["status"] == "ok" else 1)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import get_config
+    from repro.models.transformer import build_model
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, ServeConfig(
+        max_len=args.prompt_len + args.new_tokens + 8, temperature=0.0))
+    rng = np.random.default_rng(0)
+    if cfg.family == "audio":
+        batch = {"tokens": jnp.asarray(rng.integers(
+            0, cfg.vocab_size,
+            (args.batch, args.prompt_len, cfg.n_codebooks)), jnp.int32)}
+    elif cfg.family == "vlm":
+        batch = {"tokens": jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32),
+            "image_embeds": jnp.asarray(rng.standard_normal(
+                (args.batch, cfg.frontend_tokens, cfg.d_model)),
+                jnp.float32)}
+    else:
+        batch = {"tokens": jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)}
+    out = engine.generate(params, batch, n_new=args.new_tokens)
+    print("generated:", out.shape)
+    print(out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

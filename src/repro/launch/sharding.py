@@ -1,0 +1,191 @@
+"""Sharding resolver: params / optimizer / batch / cache -> PartitionSpecs.
+
+Policy (2-D "FSDP x tensor" with divisibility fallback, DESIGN.md §5):
+  * every tensor with >= 2 non-stacked dims shards its largest dim divisible
+    by |model| on the ``model`` axis and the largest remaining dim divisible
+    by |data| on the ``data`` axis; anything else replicates;
+  * leading *stacking* axes (scan-over-layers / zamba period grouping /
+    per-application caches) are never sharded -- scan slices them;
+  * vectors / scalars replicate;
+  * batch arrays shard their leading dim over ('pod','data') when divisible;
+  * KV caches shard batch over data and the *sequence* axis over model (this
+    is what makes MQA (kv=1) and 500k-token caches shardable);
+  * optimizer state inherits parameter specs leaf-by-leaf;
+  * the ``pod`` axis is pure data parallelism: parameters replicate across
+    pods (gradient all-reduce crosses the pod axis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+KeyPath = Tuple[Any, ...]
+
+
+def _path_str(path: KeyPath) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _n_stack_dims(path: str, cfg: ArchConfig) -> int:
+    """Leading axes that scan slices (never shard them)."""
+    if "tail_blocks" in path:
+        return 1
+    if "blocks" in path:
+        # zamba grouped stacks are (periods, period, ...)
+        if cfg.shared_attn_period and cfg.scan_layers:
+            return 2
+        return 1 if cfg.scan_layers else 0
+    if "shared_proj" in path:
+        return 1
+    return 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg: ArchConfig,
+               data: int, model: int, use_data: bool = True) -> P:
+    skip = _n_stack_dims(path, cfg)
+    dims = list(range(skip, len(shape)))
+    assign: Dict[int, Optional[str]] = {}
+    # largest divisible dim -> model
+    for d in sorted(dims, key=lambda d: -shape[d]):
+        if shape[d] % model == 0 and shape[d] >= model:
+            assign[d] = "model"
+            dims.remove(d)
+            break
+    if use_data:
+        for d in sorted(dims, key=lambda d: -shape[d]):
+            if shape[d] % data == 0 and shape[d] >= data:
+                assign[d] = "data"
+                break
+    spec = [assign.get(i) for i in range(len(shape))]
+    # vectors / tiny tensors: replicate
+    if len([s for s in shape]) <= 1:
+        spec = [None] * len(shape)
+    return P(*spec)
+
+
+def params_shardings(params_shapes: Any, cfg: ArchConfig, mesh: Mesh,
+                     mode: str = "train") -> Any:
+    """Map a pytree of ShapeDtypeStruct/arrays to NamedShardings.
+
+    mode="train": 2-D FSDP x tensor sharding (optimizer state dominates).
+    mode="serve": weight-stationary -- shard on ``model`` only, replicate
+    over the data axes. Inference holds no optimizer state, so the extra
+    per-device weight memory buys away the per-layer FSDP weight
+    all-gathers that dominated the serving collective term (measured on
+    granite-moe decode_32k, EXPERIMENTS.md §Perf).
+    """
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data, model = axis.get("data", 1), axis.get("model", 1)
+    use_data = mode != "serve"
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        spec = param_spec(_path_str(path), shape, cfg, data, model,
+                          use_data=use_data)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_shardings(opt_shapes: Any, param_shards: Any, mesh: Mesh) -> Any:
+    """AdamWState(step, mu, nu, master): moments and masters mirror the
+    parameter shardings, step replicates."""
+    from repro.train.optimizer import AdamWState
+    rep = NamedSharding(mesh, P())
+    if isinstance(opt_shapes, AdamWState):
+        master = param_shards if opt_shapes.master is not None else None
+        return AdamWState(step=rep, mu=param_shards, nu=param_shards,
+                          master=master)
+    raise TypeError(type(opt_shapes))
+
+
+def pick_batch_axes(mesh: Mesh, global_batch: int,
+                    allow_model: bool) -> Tuple[str, ...]:
+    """Greedy batch-parallel axes: ('pod','data'[,'model']) while the product
+    still divides the global batch. Including 'model' gives full-FSDP
+    sharding (ZeRO-3) -- right for train_4k's 256-sample batch; serving
+    shapes keep 'model' for tensor/sequence sharding."""
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    order = ["pod", "data"] + (["model"] if allow_model else [])
+    chosen: list = []
+    prod = 1
+    for a in order:
+        if a not in axis:
+            continue
+        if global_batch % (prod * axis[a]) == 0:
+            chosen.append(a)
+            prod *= axis[a]
+    return tuple(chosen)
+
+
+def batch_shardings(batch_shapes: Dict[str, Any], mesh: Mesh,
+                    batch_axes: Optional[Tuple[str, ...]] = None
+                    ) -> Dict[str, Any]:
+    from repro.launch.mesh import data_axes
+    dp = tuple(batch_axes) if batch_axes is not None else data_axes(mesh)
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = int(np.prod([axis[a] for a in dp])) if dp else 1
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if (len(shape) >= 1 and dp and shape[0] % dp_size == 0
+                and shape[0] >= dp_size):
+            return NamedSharding(mesh, P(dp, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, cfg: ArchConfig, mesh: Mesh) -> Any:
+    """KV caches: (B, T, Hkv, hd) -> (data, model, None, None); ring buffers
+    and zamba per-application stacks keep their stacking dim replicated;
+    SSM states: (B, H, ...) -> (data, model, ...)."""
+    from repro.launch.mesh import data_axes
+    axis = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data, model = axis.get("data", 1), axis.get("model", 1)
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([axis[a] for a in dp]))
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        path_s = _path_str(path)
+        spec: list = [None] * len(shape)
+        # stacked layer dim(s) first (scan-over-layers / shared apps)
+        offset = 0
+        if "blocks" in path_s and cfg.scan_layers:
+            offset = 2 if (cfg.shared_attn_period and "mamba" in path_s) else 1
+        if len(shape) <= offset:
+            return NamedSharding(mesh, P())
+        # batch dim
+        if shape[offset] % dp_size == 0 and shape[offset] >= dp_size:
+            spec[offset] = dp
+        # next dim: sequence (attn cache) or heads (ssm states)
+        if len(shape) > offset + 1:
+            d = offset + 1
+            if shape[d] % model == 0 and shape[d] >= model:
+                spec[d] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

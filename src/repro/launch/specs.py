@@ -1,0 +1,152 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) combination.
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins with zero device allocation.  It returns everything a
+step function lowering needs: abstract args + their NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig, get_config
+from repro.configs.shapes import InputShape, get_shape
+from repro.launch import sharding as sh
+from repro.models.transformer import Model, build_model
+from repro.train.loop import TrainConfig, make_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+
+def resolve_arch_for_shape(arch: str, shape_name: str
+                           ) -> Tuple[ArchConfig, bool]:
+    """Returns (config, is_swa_variant).
+
+    long_500k on a full-attention arch uses the explicitly-labeled
+    sliding-window variant (DESIGN.md §4): window 4096 ring cache.
+    """
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.long_context == "swa_variant":
+        return dataclasses.replace(cfg, sliding_window=4096), True
+    return cfg, False
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return {"tokens": SDS((b, s, cfg.n_codebooks), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.frontend_tokens
+        return {"tokens": SDS((b, s - p), jnp.int32),
+                "image_embeds": SDS((b, p, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((b, s), jnp.int32)}
+
+
+def decode_token_specs(cfg: ArchConfig, shape: InputShape) -> SDS:
+    b = shape.global_batch
+    if cfg.family == "audio":
+        return SDS((b, cfg.n_codebooks), jnp.int32)
+    return SDS((b,), jnp.int32)
+
+
+def model_state_specs(model: Model, tc: TrainConfig):
+    """Abstract (params, opt_state) via eval_shape -- no allocation."""
+    from repro.train.loop import init_train_state
+    return jax.eval_shape(
+        lambda k: init_train_state(model, tc, k), jax.random.PRNGKey(0))
+
+
+def cache_specs(model: Model, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, dtype=dtype))
+
+
+def serve_param_specs(model: Model, dtype=jnp.bfloat16):
+    """Serving weights live in bf16 (no optimizer, no masters needed)."""
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map(
+        lambda p: SDS(p.shape, dtype)
+        if (p.dtype == jnp.float32 and len(p.shape) >= 2) else p, params)
+
+
+def build_case(arch: str, shape_name: str, mesh: Mesh,
+               compute_dtype=jnp.bfloat16):
+    """Everything needed to lower one (arch x shape) on a mesh.
+
+    Returns dict with: kind, fn, args (SDS pytree), in_shardings,
+    out_shardings, donate, cfg, variant flag.
+    """
+    cfg, variant = resolve_arch_for_shape(arch, shape_name)
+    return build_case_from_cfg(cfg, shape_name, mesh, compute_dtype,
+                               variant=variant)
+
+
+def build_case_from_cfg(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+                        compute_dtype=jnp.bfloat16, variant: bool = False):
+    """build_case for an explicit (possibly depth-modified) config --
+    used by the roofline depth-differencing."""
+    shape = get_shape(shape_name)
+    model = build_model(cfg)
+    tc = TrainConfig(compute_dtype=compute_dtype,
+                     master_weights=compute_dtype != jnp.float32)
+
+    if shape.kind == "train":
+        from repro.train.loop import make_train_step
+        params, opt = model_state_specs(model, tc)
+        batch = batch_specs(cfg, shape)
+        batch_axes = sh.pick_batch_axes(mesh, shape.global_batch,
+                                        allow_model=True)
+        p_sh = sh.params_shardings(params, cfg, mesh)
+        o_sh = sh.opt_shardings(opt, p_sh, mesh)
+        b_sh = sh.batch_shardings(batch, mesh, batch_axes)
+        p_specs = jax.tree_util.tree_map(lambda s: s.spec, p_sh)
+        fn = make_train_step(model, tc, param_specs=p_specs)
+        metrics_sh = None  # scalars; let XLA choose (replicated)
+        return dict(kind="train", fn=fn, args=(params, opt, batch),
+                    in_shardings=(p_sh, o_sh, b_sh),
+                    out_shardings=(p_sh, o_sh, metrics_sh),
+                    donate=(0, 1), cfg=cfg, model=model, variant=variant,
+                    batch_axes=batch_axes)
+
+    if shape.kind == "prefill":
+        params = serve_param_specs(model, compute_dtype)
+        batch = batch_specs(cfg, shape)
+        cache = cache_specs(model, shape.global_batch, shape.seq_len)
+        batch_axes = sh.pick_batch_axes(mesh, shape.global_batch,
+                                        allow_model=False)
+        p_sh = sh.params_shardings(params, cfg, mesh, mode="serve")
+        b_sh = sh.batch_shardings(batch, mesh, batch_axes)
+        c_sh = sh.cache_shardings(cache, cfg, mesh)
+
+        def prefill_fn(params, batch, cache):
+            return model.prefill(params, batch, cache, dtype=compute_dtype)
+
+        return dict(kind="prefill", fn=prefill_fn,
+                    args=(params, batch, cache),
+                    in_shardings=(p_sh, b_sh, c_sh),
+                    out_shardings=(None, c_sh), donate=(2,),
+                    cfg=cfg, model=model, variant=variant,
+                    batch_axes=batch_axes)
+
+    # decode: ONE new token against a cache of seq_len
+    params = serve_param_specs(model, compute_dtype)
+    tokens = decode_token_specs(cfg, shape)
+    cache = cache_specs(model, shape.global_batch, shape.seq_len)
+    batch_axes = sh.pick_batch_axes(mesh, shape.global_batch,
+                                    allow_model=False)
+    p_sh = sh.params_shardings(params, cfg, mesh, mode="serve")
+    t_sh = sh.batch_shardings({"t": tokens}, mesh, batch_axes)["t"]
+    c_sh = sh.cache_shardings(cache, cfg, mesh)
+
+    def decode_fn(params, tokens, cache):
+        return model.decode_step(params, tokens, cache, dtype=compute_dtype)
+
+    return dict(kind="decode", fn=decode_fn, args=(params, tokens, cache),
+                in_shardings=(p_sh, t_sh, c_sh),
+                out_shardings=(None, c_sh), donate=(2,),
+                cfg=cfg, model=model, variant=variant,
+                batch_axes=batch_axes)

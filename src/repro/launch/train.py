@@ -1,0 +1,64 @@
+"""Multi-pod training launcher.
+
+On real hardware this runs under the production mesh with pjit shardings
+(same build_case machinery the dry-run validates); on this CPU container use
+--local for a single-device functional run, or --dry-run to lower+compile
+only.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --local \
+        --steps 20 --seq 128 --batch 4
+    PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --dry-run
+"""
+import argparse
+import os
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--local", action="store_true",
+                    help="reduced config, single device, real steps")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_case
+        rec = run_case(args.arch, args.shape, args.multi_pod, force=True)
+        raise SystemExit(0 if rec["status"] == "ok" else 1)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import get_config
+    from repro.data.tokens import DataConfig, TokenStream
+    from repro.models.transformer import build_model
+    from repro.train.loop import (TrainConfig, init_train_state,
+                                  make_train_step)
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    tc = TrainConfig()
+    params, opt_state = init_train_state(model, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    stream = TokenStream(cfg, DataConfig(seq_len=args.seq,
+                                         batch_size=args.batch))
+    for i, batch in enumerate(stream.batches(args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(metrics['loss']):.4f}")
+    if args.ckpt:
+        from repro.train.checkpoint import save
+        print("saved:", save(args.ckpt, args.steps, params))
+
+
+if __name__ == "__main__":
+    main()

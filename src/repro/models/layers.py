@@ -1,0 +1,347 @@
+"""Foundational model layers (pure-functional, pjit/shard_map friendly).
+
+Conventions:
+  * params are plain dict pytrees, stored float32; compute casts weights to
+    the activation dtype (bf16 in production, f32 in tests);
+  * all apply functions are shape-polymorphic over batch and sequence;
+  * attention supports MHA / GQA / MQA via n_kv_heads, causal and
+    sliding-window masking, and both full-sequence and KV-cache paths;
+  * softmax and norms accumulate in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.utils.pjit_utils import BATCH, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+NEG_INF = -2.0e38  # large-negative float32 mask value (avoids NaN from inf-inf)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, in_dim: int, out_dim: int,
+               scale: float = 0.02) -> Array:
+    return scale * jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+
+
+def embed_init(key: Array, vocab: int, dim: int, scale: float = 0.02) -> Array:
+    return scale * jax.random.normal(key, (vocab, dim), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str) -> Params:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layer":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+def apply_norm(params: Params, x: Array, kind: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    elif kind == "layer":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = ((xf - mean) * jax.lax.rsqrt(var + eps) * params["scale"]
+               + params["bias"])
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D), positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key: Array, cfg: ArchConfig) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ko, cfg.n_heads * hd, d,
+                         scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _causal_window_mask(q_pos: Array, k_pos: Array,
+                        window: Optional[int]) -> Array:
+    """(..., S_q, S_k) boolean mask: True = attend."""
+    mask = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        mask &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return mask
+
+
+#: sequences at or above this length use the query-chunked attention path
+#: (caps the softmax transient at (B, H, Q_CHUNK, T) -- the XLA analogue of
+#: flash attention's tiling; the Pallas kernel replaces it on real TPUs)
+ATTN_CHUNK_THRESHOLD = 2048
+ATTN_Q_CHUNK = 1024
+
+
+def _repeat_kv(k: Array, n_heads: int) -> Array:
+    """GQA/MQA: broadcast kv heads to the full head count.
+
+    An explicit repeat keeps the head axis cleanly divisible for the tensor-
+    parallel sharding (q-heads shard over ``model``; kv stays tiny)."""
+    hkv = k.shape[2]
+    if hkv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hkv, axis=2)
+
+
+def grouped_attention(q: Array, k: Array, v: Array, mask: Array,
+                      head_dim: int, seq_sharded_kv: bool = False) -> Array:
+    """Attention core. q: (B,S,H,D), k/v: (B,T,Hkv,D), mask broadcastable to
+    (B,1,S,T). Returns (B,S,H,D).
+
+    seq_sharded_kv: decode-over-cache mode -- pin every intermediate to the
+    cache's sequence sharding (flash-decode): scores shard on T, the softmax
+    stats and the output contraction reduce with small all-reduces, and the
+    cache is never resharded (otherwise the output projection's head
+    sharding back-propagates through the einsums and GSPMD all-gathers the
+    whole cache -- EXPERIMENTS.md §Perf)."""
+    b, s, h, d = q.shape
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    if seq_sharded_kv:
+        k = constrain(k, BATCH, "model", None, None)
+        v = constrain(v, BATCH, "model", None, None)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    if seq_sharded_kv:
+        scores = constrain(scores, BATCH, None, None, "model")
+    scores = scores * (1.0 / head_dim ** 0.5)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    if seq_sharded_kv:
+        probs = constrain(probs, BATCH, None, None, "model")
+    out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    if seq_sharded_kv:
+        out = constrain(out, BATCH, None, None, None)
+    return out
+
+
+def chunked_grouped_attention(q: Array, k: Array, v: Array,
+                              q_pos: Array, k_pos: Array,
+                              window: Optional[int], head_dim: int,
+                              extra_k_mask: Optional[Array] = None,
+                              q_chunk: int = ATTN_Q_CHUNK) -> Array:
+    """Query-chunked attention: memory O(B*H*q_chunk*T) instead of S*T.
+
+    q: (B,S,H,D); k/v: (B,T,Hkv,D); q_pos: (B,S); k_pos: (B,T).
+    extra_k_mask: (B,T) validity mask (cache slots), optional.
+    """
+    b, s, h, d = q.shape
+    if s % q_chunk != 0:
+        q_chunk = s  # fallback: single chunk (small/odd sequences)
+    nq = s // q_chunk
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    qc = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 1, 0)
+    pc = jnp.moveaxis(q_pos.reshape(b, nq, q_chunk), 1, 0)
+
+    def one_chunk(args):
+        q_i, p_i = args                       # (B,qc,H,D), (B,qc)
+        mask = _causal_window_mask(p_i, k_pos, window)
+        if extra_k_mask is not None:
+            mask &= extra_k_mask[:, None, :]
+        scores = jnp.einsum("bshd,bthd->bhst", q_i, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores * (1.0 / head_dim ** 0.5)
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q_i.dtype)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    # checkpoint each chunk: AD over lax.map otherwise stacks the f32
+    # softmax probs for every chunk (measured 6 x 2.1 GB/device on the
+    # zamba2 shared-attention block -- EXPERIMENTS.md §Perf); recomputing
+    # them in backward is exactly flash attention's trade.
+    out = jax.lax.map(jax.checkpoint(one_chunk), (qc, pc))  # (nq,B,qc,H,D)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, d)
+
+
+def attention_apply(params: Params, x: Array, cfg: ArchConfig,
+                    positions: Array,
+                    window: Optional[int] = None,
+                    cache: Optional[Params] = None,
+                    cache_pos: Optional[Array] = None,
+                    ) -> Tuple[Array, Optional[Params]]:
+    """Full-sequence (cache=None) or cached (prefill/decode) attention.
+
+    positions: (B, S) absolute token positions for RoPE + causal masking.
+    cache: {"k": (B, T, Hkv, D), "v": ..., "pos": (B, T)} -- T is either the
+      full max length or the ring-buffer window size. cache_pos: (B,) write
+      offset of the first new token.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if s >= ATTN_CHUNK_THRESHOLD:
+            out = chunked_grouped_attention(q, k, v, positions, positions,
+                                            window, hd)
+        else:
+            mask = _causal_window_mask(positions, positions, window)
+            out = grouped_attention(q, k, v, mask[:, None], hd)
+        new_cache = None
+    else:
+        t = cache["k"].shape[1]
+        # Cache-write strategy matters for SPMD: a dynamic-slice/scatter at a
+        # traced offset breaks the sequence sharding of the cache (XLA falls
+        # back to full rematerialization and then all-gathers the cache --
+        # measured 2 x 536 MB f32 gathers per layer on decode_32k,
+        # EXPERIMENTS.md §Perf).  Three shardable paths:
+        #   s == t : prefill fills the cache exactly -> direct replace;
+        #   s == 1 : decode -> one-hot where-update (pure elementwise);
+        #   else   : small/test segments -> per-batch dynamic slice.
+        if s == t:
+            cache = {
+                "k": k.astype(cache["k"].dtype),
+                "v": v.astype(cache["v"].dtype),
+                "pos": positions,
+            }
+        elif s == 1:
+            slot = cache_pos if window is None else cache_pos % t
+            hit = jnp.arange(t)[None, :] == slot[:, None]       # (B, T)
+            hit4 = hit[:, :, None, None]
+
+            def write(buf, new):
+                return jnp.where(hit4, new.astype(buf.dtype), buf)
+
+            cache = {
+                "k": write(cache["k"], k),
+                "v": write(cache["v"], v),
+                "pos": jnp.where(hit, positions, cache["pos"]),
+            }
+        else:
+            slot = cache_pos if window is None else cache_pos % t
+
+            def write(buf, new):
+                def upd(buf_b, new_b, start):
+                    if window is None:
+                        return jax.lax.dynamic_update_slice_in_dim(
+                            buf_b, new_b.astype(buf_b.dtype), start, axis=0)
+                    idx = (start + jnp.arange(s)) % t
+                    return buf_b.at[idx].set(new_b.astype(buf_b.dtype))
+                return jax.vmap(upd)(buf, new, slot)
+
+            cache = {
+                "k": write(cache["k"], k),
+                "v": write(cache["v"], v),
+                "pos": jax.vmap(lambda pb, pn, st: (
+                    jax.lax.dynamic_update_slice_in_dim(pb, pn, st, axis=0)
+                    if window is None
+                    else pb.at[(st + jnp.arange(s)) % t].set(pn)
+                ))(cache["pos"], positions, slot),
+            }
+        k_pos = cache["pos"]                            # (B, T)
+        valid = k_pos >= 0                              # unwritten slots
+        # Decode reads keep the cache SEQUENCE-sharded (flash-decode): pin q
+        # heads replicated and the cache on ('model' @ seq) so GSPMD computes
+        # per-shard partial softmax + a tiny stats all-reduce, instead of
+        # resharding the cache to head sharding (measured 2 x 536 MB f32
+        # cache all-gathers per layer on decode_32k -- EXPERIMENTS.md §Perf).
+        k_c = constrain(cache["k"].astype(dt), BATCH, "model", None, None)
+        v_c = constrain(cache["v"].astype(dt), BATCH, "model", None, None)
+        if s >= ATTN_CHUNK_THRESHOLD:
+            out = chunked_grouped_attention(
+                q, k_c, v_c, positions, k_pos, window, hd,
+                extra_k_mask=valid)
+        else:
+            q = constrain(q, BATCH, None, None, None)
+            mask = _causal_window_mask(positions, k_pos, window)
+            mask &= valid[:, None, :]
+            out = grouped_attention(q, k_c, v_c, mask[:, None], hd,
+                                    seq_sharded_kv=True)
+        new_cache = cache
+
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return out @ params["wo"].astype(dt), new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int,
+                    window: Optional[int] = None,
+                    dtype=jnp.bfloat16) -> Params:
+    t = min(window, max_len) if window is not None else max_len
+    return {
+        "k": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, t, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, t), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    down_scale = 0.02 / max(1, cfg.n_layers) ** 0.5
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, d, f),
+                "w_up": dense_init(k2, d, f),
+                "w_down": dense_init(k3, f, d, scale=down_scale)}
+    if cfg.mlp == "gelu":
+        return {"w_in": dense_init(k1, d, f),
+                "w_down": dense_init(k2, f, d, scale=down_scale)}
+    raise ValueError(f"unknown mlp {cfg.mlp!r}")
+
+
+def mlp_apply(params: Params, x: Array, cfg: ArchConfig) -> Array:
+    dt = x.dtype
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else (
+            lambda a: jax.nn.gelu(a, approximate=True))
+        gate = act(x @ params["w_gate"].astype(dt))
+        up = x @ params["w_up"].astype(dt)
+        return (gate * up) @ params["w_down"].astype(dt)
+    hidden = jax.nn.gelu(x @ params["w_in"].astype(dt), approximate=True)
+    return hidden @ params["w_down"].astype(dt)

@@ -1,0 +1,209 @@
+"""Mamba2 (SSD) block with chunked parallel scan [used by Zamba2, arXiv:2411.15242].
+
+State-space duality form: per head h with scalar decay a_t = exp(dt_t * A_h)
+(A_h < 0), inputs x (T,H,P), B/C (T,G,N) (G groups broadcast over heads):
+
+    S_t = a_t S_{t-1} + dt_t * B_t (x) x_t         (state: H x P x N)
+    y_t = C_t . S_t + D_h x_t
+
+The chunked algorithm turns the recurrence into MXU-friendly matmuls:
+intra-chunk quadratic attention-like term + inter-chunk state scan
+(chunk count only), so HLO cost analysis sees the real FLOPs.  All decay
+algebra is carried in log space and the exps are <= 1 (stable in f32).
+
+Decode: O(1) single-step state update with a rolling causal-conv buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.utils.pjit_utils import BATCH, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_heads * cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, conv_dim
+
+
+def mamba2_init(key: Array, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    d_inner, conv_dim = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # order: [z (d_inner) | xBC (conv_dim) | dt (H)]
+        "in_proj": dense_init(k1, d, 2 * d_inner + 2 * g * n + h),
+        "conv_w": 0.1 * jax.random.normal(
+            k2, (cfg.conv_width, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),   # A = -exp(A_log) < 0
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 1e-2))),  # softplus^-1
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(k3, d_inner, d,
+                               scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: Array):
+    d_inner, _ = dims(cfg)
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:-h]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over the sequence axis. xbc: (B, S, C)."""
+    kw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    # windowed sum: sum_j w[j] * x[t - (kw-1) + j]
+    out = sum(pad[:, j:j + xbc.shape[1]] * w[j].astype(xbc.dtype)
+              for j in range(kw))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def _gated_rmsnorm(y: Array, z: Array, scale: Array, eps: float = 1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def ssd_chunked(x: Array, dt: Array, B: Array, C: Array, A: Array,
+                chunk: int, state0: Array | None = None,
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x: (B, T, H, P); dt: (B, T, H); B/C: (B, T, G, N); A: (H,) negative.
+    T must be a multiple of ``chunk``. Returns (y (B,T,H,P), final state
+    (B,H,P,N)). All in f32.
+    """
+    b, t, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    rep = h // g
+
+    def cshape(a, extra):
+        return a.reshape((b, nc, chunk) + extra)
+
+    x = constrain(x, BATCH, None, "model", None)
+    dt = constrain(dt, BATCH, None, "model")
+    xc = cshape(x, (h, p))
+    dtc = cshape(dt, (h,))
+    Bc = jnp.repeat(cshape(B, (g, n)), rep, axis=3)     # (b,nc,q,h,n)
+    Cc = jnp.repeat(cshape(C, (g, n)), rep, axis=3)
+    Bc = constrain(Bc, BATCH, None, None, "model", None)
+    Cc = constrain(Cc, BATCH, None, None, "model", None)
+
+    logdec = dtc * A                                    # (b,nc,q,h) <= 0
+    l = jnp.cumsum(logdec, axis=2)                      # within-chunk cumsum
+    l_last = l[:, :, -1]                                # (b,nc,h)
+
+    # intra-chunk: M[t,s] = (C_t . B_s) exp(l_t - l_s) for s <= t
+    score = jnp.einsum("bcqhn,bcshn->bchqs", Cc, Bc)
+    ldiff = (l[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+             - l[:, :, None, :, :].transpose(0, 1, 4, 2, 3))
+    # ldiff[b,c,h,q,s] = l_q - l_s; mask s <= q in log space BEFORE the exp so
+    # the masked (positive, potentially huge) entries never overflow and the
+    # gradient path stays NaN-free
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    ldiff = jnp.where(causal, ldiff, -jnp.inf)
+    m = score * jnp.exp(ldiff)
+    m = constrain(m, BATCH, None, "model", None, None)
+    dx = dtc[..., None] * xc                            # (b,nc,q,h,p)
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", m, dx)
+
+    # chunk summary state: S_c = sum_s exp(l_last - l_s) dx_s (x) B_s
+    w_state = jnp.exp(l_last[:, :, None] - l)           # (b,nc,q,h)
+    s_chunk = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", w_state, dx, Bc)
+    s_chunk = constrain(s_chunk, BATCH, None, "model", None, None)
+
+    # inter-chunk scan over nc (tiny trip count)
+    def scan_fn(s_run, inp):
+        s_c, dec = inp                                  # (b,h,p,n), (b,h)
+        out = s_run
+        s_run = dec[..., None, None] * s_run + s_c
+        return s_run, out
+
+    dec_chunk = jnp.exp(l_last)                         # (b,nc,h)
+    init = (jnp.zeros((b, h, p, n), jnp.float32)
+            if state0 is None else state0.astype(jnp.float32))
+    s_final, s_prev = jax.lax.scan(
+        scan_fn, init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), dec_chunk.transpose(1, 0, 2)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)            # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y_t += exp(l_t) C_t . S_prev
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(l), Cc, s_prev)
+    y = constrain(y_intra + y_inter, BATCH, None, None, "model", None)
+    y = y.reshape(b, t, h, p)
+    return y, constrain(s_final, BATCH, "model", None, None)
+
+
+def mamba2_apply(params: Params, x: Array, cfg: ArchConfig,
+                 state: Params | None = None,
+                 ) -> Tuple[Array, Params | None]:
+    """Full-sequence forward. x: (B, S, D). state (optional) carries
+    {"conv": (B, kw-1, conv_dim), "ssm": (B, H, P, N)} across segments."""
+    b, s, d = x.shape
+    dt_ = x.dtype
+    h, p, n, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    zxbcdt = x @ params["in_proj"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+
+    if state is not None:
+        xbc_in = jnp.concatenate([state["conv"].astype(dt_), xbc], axis=1)
+        conv_out = _causal_conv(xbc_in, params["conv_w"], params["conv_b"])
+        conv_out = conv_out[:, -s:]
+        new_conv = xbc_in[:, -(cfg.conv_width - 1):]
+    else:
+        conv_out = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        new_conv = xbc[:, -(cfg.conv_width - 1):]
+
+    d_inner, _ = dims(cfg)
+    x_ssd = conv_out[..., :d_inner].reshape(b, s, h, p).astype(jnp.float32)
+    B = conv_out[..., d_inner:d_inner + g * n].reshape(b, s, g, n)
+    C = conv_out[..., d_inner + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    state0 = state["ssm"] if state is not None else None
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk != 0:
+        chunk = 1 if s == 1 else s  # degenerate safe fallback
+    y, s_final = ssd_chunked(x_ssd, dt, B.astype(jnp.float32),
+                             C.astype(jnp.float32), A, chunk, state0)
+    y = y + params["D"][None, None, :, None] * x_ssd
+    y = y.reshape(b, s, d_inner).astype(dt_)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = y @ params["out_proj"].astype(dt_)
+    new_state = {"conv": new_conv, "ssm": s_final} if state is not None else None
+    return out, new_state
+
+
+def mamba2_decode_step(params: Params, x: Array, cfg: ArchConfig,
+                       state: Params) -> Tuple[Array, Params]:
+    """Single-token decode. x: (B, 1, D)."""
+    return mamba2_apply(params, x, cfg, state)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int,
+                     dtype=jnp.bfloat16) -> Params:
+    d_inner, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), jnp.float32),
+    }

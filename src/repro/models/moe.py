@@ -1,0 +1,140 @@
+"""Mixture-of-Experts block: top-k routing with GShard-style *grouped*,
+capacity-bounded dispatch.
+
+Tokens are split into G groups (G = number of batch-parallel shards when
+running under a mesh, 1 otherwise); each group routes its own tokens into a
+per-group capacity buffer.  All gathers/scatters are then group-local, so
+under pjit the dispatch never leaves the shard -- the measured alternative
+(global sort dispatch) forced GSPMD to all-gather the full token array and
+replicate the (E, C_global, d_ff) hidden buffer: 158 GB/device on
+mixtral-8x7b train_4k (EXPERIMENTS.md §Perf).  Expert FFN compute stays
+dense per-expert matmuls (MXU-friendly); the per-expert ffn dim shards on
+the ``model`` axis when it isn't consumed by FSDP batch sharding.
+
+Auxiliary losses: Switch-style load-balance loss and router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.utils.pjit_utils import BATCH, batch_shard_count, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+
+def moe_init(key: Array, cfg: ArchConfig) -> Params:
+    k_r, k_g, k_u, k_d = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale = 0.02
+    down_scale = 0.02 / max(1, cfg.n_layers) ** 0.5
+    return {
+        "router": dense_init(k_r, d, e),
+        "w_gate": scale * jax.random.normal(k_g, (e, d, f), jnp.float32),
+        "w_up": scale * jax.random.normal(k_u, (e, d, f), jnp.float32),
+        "w_down": down_scale * jax.random.normal(k_d, (e, f, d), jnp.float32),
+    }
+
+
+def capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    per_expert = tokens_per_group * cfg.top_k / cfg.n_experts
+    return max(cfg.top_k, int(math.ceil(per_expert * cfg.capacity_factor)))
+
+
+def _dispatch_one_group(xt: Array, top_e: Array, top_w: Array, e: int,
+                        c: int):
+    """Group-local sort-based dispatch. xt: (T, D); top_e/top_w: (T, k).
+    Returns (expert_in (E+1, C, D), dest_e, dest_c, stok, weights, keep)."""
+    t, k = top_e.shape
+    flat_e = top_e.reshape(-1)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(t * k) - first
+    keep = rank < c
+    dest_e = jnp.where(keep, se, e)             # overflow bucket: expert e
+    dest_c = jnp.where(keep, rank, 0) % c
+    buf = jnp.zeros((e + 1, c, xt.shape[-1]), xt.dtype)
+    buf = buf.at[dest_e, dest_c].set(xt[stok])
+    return buf, dest_e, dest_c, stok, sw, keep
+
+
+def moe_apply(params: Params, x: Array, cfg: ArchConfig,
+              capacity_override: int | None = None,
+              ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (B, S, D) -> (y, aux_losses). Dropped-token policy: residual only.
+
+    capacity_override: serving decode passes T (token count) for dropless
+    exactness; training keeps capacity-bounded routing.
+    """
+    b, s, d = x.shape
+    dt = x.dtype
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    groups = batch_shard_count()
+    if t % groups != 0 or (t // groups) < e:
+        groups = 1
+    tg = t // groups
+    c = (capacity_override if capacity_override is not None
+         else capacity(tg, cfg))
+    c = min(c, tg * k)
+    xt = x.reshape(groups, tg, d)
+    xt = constrain(xt, BATCH, None, None)
+
+    logits = (xt @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                # (G, Tg, E)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    buf, dest_e, dest_c, stok, sw, keep = jax.vmap(
+        lambda xg, eg, wg: _dispatch_one_group(xg, eg, wg, e, c)
+    )(xt, top_e, top_w)
+    expert_in = constrain(buf[:, :-1], BATCH, None, None, None)  # (G,E,C,D)
+
+    # ---- per-expert ffn (dense MXU matmuls) --------------------------------
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else (
+            lambda a: jax.nn.gelu(a, approximate=True))
+        gate = act(jnp.einsum("gecd,edf->gecf", expert_in,
+                              params["w_gate"].astype(dt)))
+        up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"].astype(dt))
+        hidden = gate * up
+    else:
+        hidden = jax.nn.gelu(jnp.einsum(
+            "gecd,edf->gecf", expert_in, params["w_gate"].astype(dt)),
+            approximate=True)
+    hidden = constrain(hidden, BATCH, None, None, "model")
+    expert_out = jnp.einsum("gecf,efd->gecd", hidden,
+                            params["w_down"].astype(dt))
+    expert_out = constrain(expert_out, BATCH, None, None, None)
+
+    # ---- combine (group-local gather + scatter-add) ------------------------
+    def _combine(out_e, de, dc, tok, w, kp):
+        vals = out_e[de, dc] * (w * kp).astype(dt)[:, None]
+        return jnp.zeros((tg, d), dt).at[tok].add(vals)
+
+    pad = jnp.zeros((groups, 1, c, d), dt)
+    y = jax.vmap(_combine)(jnp.concatenate([expert_out, pad], axis=1),
+                           dest_e, dest_c, stok, sw, keep)
+    y = constrain(y, BATCH, None, None)
+
+    # ---- aux losses ---------------------------------------------------------
+    assign = jax.nn.one_hot(top_e.reshape(groups, -1), e, dtype=jnp.float32)
+    frac_assigned = jnp.mean(assign, axis=(0, 1)) * e
+    mean_prob = jnp.mean(probs, axis=(0, 1)) * e
+    lb_loss = jnp.mean(frac_assigned * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {
+        "moe_lb": cfg.router_aux_weight * lb_loss,
+        "moe_z": cfg.router_z_weight * z_loss,
+        "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,217 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+[arXiv:2404.05892] Per head (dim N), with r/k/v/g projections of the
+token-shift-mixed input and a per-channel data-dependent decay
+``w_t = exp(-exp(w_base + lora_w(x)))``:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T           (state: N x N per head)
+    y_t = S_{t-1}^T r_t + v_t (u * k_t)^T r_t     (u = per-channel bonus)
+
+Training uses a lax.scan over time (the recurrence is the architecture --
+cost-analysis FLOPs for this block are derived analytically in
+launch/roofline.py, see DESIGN.md §6).  Decode carries (x_prev_tm,
+x_prev_cm, S) per layer: O(1) per token, no KV cache -> long_500k native.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+from repro.utils.pjit_utils import BATCH, constrain
+
+Array = jax.Array
+Params = Dict[str, Array]
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def rwkv_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def time_mix_init(key: Array, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    rank_m, rank_w = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    return {
+        "mix_base": 0.5 * jnp.ones((len(_MIX_NAMES), d), jnp.float32),
+        "mix_lora_a": dense_init(ks[0], d, len(_MIX_NAMES) * rank_m),
+        "mix_lora_b": 0.02 * jax.random.normal(
+            ks[1], (len(_MIX_NAMES), rank_m, d), jnp.float32),
+        "w_r": dense_init(ks[2], d, d),
+        "w_k": dense_init(ks[3], d, d),
+        "w_v": dense_init(ks[4], d, d),
+        "w_g": dense_init(ks[5], d, d),
+        "w_o": dense_init(ks[6], d, d,
+                          scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+        "decay_base": -6.0 + jnp.zeros((d,), jnp.float32),
+        "decay_lora_a": dense_init(ks[7], d, rank_w),
+        "decay_lora_b": 0.02 * jax.random.normal(ks[8], (rank_w, d),
+                                                 jnp.float32),
+        "bonus": 0.5 * jnp.ones((d,), jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),
+        "ln_x_bias": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def channel_mix_init(key: Array, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "w_key": dense_init(k1, d, f),
+        "w_value": dense_init(k2, f, d,
+                              scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+        "w_receptance": dense_init(k3, d, d),
+    }
+
+
+def _group_norm(x: Array, scale: Array, bias: Array, n_heads: int,
+                eps: float = 1e-5) -> Array:
+    """Per-head group norm over the channel dim (RWKV's ln_x)."""
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32).reshape(b, s, n_heads, d // n_heads)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(b, s, d) * scale + bias).astype(x.dtype)
+
+
+def _ddlerp(params: Params, x: Array, x_prev: Array) -> Tuple[Array, ...]:
+    """Data-dependent token-shift mix for each of r/k/v/w/g."""
+    dt = x.dtype
+    diff = x_prev - x
+    base = x + diff * params["mix_base"].astype(dt)[0]  # coarse mixed input
+    rank = params["mix_lora_a"].shape[1] // len(_MIX_NAMES)
+    lora_in = jnp.tanh(base @ params["mix_lora_a"].astype(dt))
+    lora_in = lora_in.reshape(*lora_in.shape[:-1], len(_MIX_NAMES), rank)
+    lora = jnp.einsum("...mr,mrd->...md", lora_in,
+                      params["mix_lora_b"].astype(dt))
+    outs = []
+    for i, _ in enumerate(_MIX_NAMES):
+        mix = params["mix_base"].astype(dt)[i] + lora[..., i, :]
+        outs.append(x + diff * mix)
+    return tuple(outs)
+
+
+def _decay(params: Params, xw: Array) -> Array:
+    """Per-channel decay in (0, 1), data-dependent (f32 for stability)."""
+    lora = jnp.tanh(xw.astype(jnp.float32)
+                    @ params["decay_lora_a"]) @ params["decay_lora_b"]
+    return jnp.exp(-jnp.exp(params["decay_base"] + lora))
+
+
+#: chunk length for the chunked wkv scan (q^2 * n transient per chunk)
+WKV_CHUNK = 64
+
+
+def _wkv_chunked(r: Array, k: Array, v: Array, w: Array, u: Array,
+                 state: Array, chunk: int) -> Tuple[Array, Array]:
+    """Chunked linear-attention scan with per-channel data-dependent decay.
+
+    r/k/v/w: (B, S, H, N) f32 (w in (0,1)); u: (H, N); state: (B, H, N, N).
+    Returns (y (B,S,H,N), final state).  Within each chunk the pairwise decay
+    exp(L_{t-1} - L_s) is computed in log space and masked before the exp, so
+    nothing overflows (the same stabilization as the Mamba2 SSD path); the
+    chunk summaries propagate through a scan with a tiny trip count.  This is
+    the TPU adaptation of RWKV's sequential CUDA kernel (DESIGN.md §3).
+    """
+    b, s, h, n = r.shape
+    if s % chunk != 0:
+        chunk = 1 if s < chunk else s  # degenerate fallback for odd lengths
+    nc = s // chunk
+
+    logw = jnp.log(jnp.maximum(w, 1e-12))                 # (B,S,H,N) <= 0
+    r, k, v, logw = (constrain(a, BATCH, None, "model", None)
+                     for a in (r, k, v, logw))
+    rc = jnp.moveaxis(r.reshape(b, nc, chunk, h, n), 1, 0)
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, h, n), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, h, n), 1, 0)
+    lw = jnp.moveaxis(logw.reshape(b, nc, chunk, h, n), 1, 0)
+
+    def one_chunk(S, inp):
+        r_i, k_i, v_i, lw_i = inp                         # (B,q,H,N)
+        S = constrain(S, BATCH, "model", None, None)
+        l = jnp.cumsum(lw_i, axis=1)                      # L_t, inclusive
+        l_prev = l - lw_i                                 # L_{t-1}
+        # pairwise decay exp(L_{t-1}[t] - L[s]) for s < t, per channel
+        ldiff = l_prev[:, :, None] - l[:, None, :]        # (B,t,s,H,N)
+        strict = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        ldiff = jnp.where(strict[None, :, :, None, None], ldiff, -jnp.inf)
+        m = jnp.einsum("bthn,bshn,btshn->bhts", r_i, k_i, jnp.exp(ldiff))
+        y = jnp.einsum("bhts,bshn->bthn", m, v_i)
+        # bonus diagonal: y_t += (r_t . u*k_t) v_t
+        diag = jnp.einsum("bthn,hn,bthn->bth", r_i, u, k_i)
+        y = y + diag[..., None] * v_i
+        # inter-chunk: y_t += (r_t * exp(L_{t-1})) . S_prev
+        y = y + jnp.einsum("bthn,bhnj->bthj", r_i * jnp.exp(l_prev), S)
+        # state update: S' = diag(exp(L_Q)) S + sum_s exp(L_Q - L_s) k_s v_s^T
+        l_last = l[:, -1]                                 # (B,H,N)
+        k_tilde = k_i * jnp.exp(l_last[:, None] - l)
+        S = (jnp.exp(l_last)[..., None] * S
+             + jnp.einsum("bshn,bshj->bhnj", k_tilde, v_i))
+        return (constrain(S, BATCH, "model", None, None),
+                constrain(y, BATCH, None, "model", None))
+
+    state = constrain(state.astype(jnp.float32), BATCH, "model", None, None)
+    # checkpoint the chunk body: without it, AD stacks the (B,q,q,H,N)
+    # pairwise-decay tensor across all chunks as scan residuals (measured
+    # 2 x 4.3 GB/device on rwkv6-7b train_4k -- EXPERIMENTS.md §Perf)
+    state, ys = jax.lax.scan(jax.checkpoint(one_chunk), state,
+                             (rc, kc, vc, lw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, n)
+    return y, state
+
+
+def time_mix_apply(params: Params, x: Array, cfg: ArchConfig,
+                   x_prev: Array, state: Array,
+                   ) -> Tuple[Array, Array, Array]:
+    """x: (B, S, D); x_prev: (B, D) last token of the previous segment;
+    state: (B, H, N, N). Returns (out, new_x_prev, new_state)."""
+    b, s, d = x.shape
+    h = rwkv_heads(cfg)
+    n = cfg.rwkv_head_dim
+    dt = x.dtype
+
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, shifted)
+
+    r = (xr @ params["w_r"].astype(dt)).reshape(b, s, h, n).astype(jnp.float32)
+    k = (xk @ params["w_k"].astype(dt)).reshape(b, s, h, n).astype(jnp.float32)
+    v = (xv @ params["w_v"].astype(dt)).reshape(b, s, h, n).astype(jnp.float32)
+    g = xg @ params["w_g"].astype(dt)
+    w = _decay(params, xw).reshape(b, s, h, n)              # (0,1), f32
+    u = params["bonus"].reshape(h, n)
+
+    y, state = _wkv_chunked(r, k, v, w, u, state, WKV_CHUNK)
+    y = y.reshape(b, s, d).astype(dt)
+
+    y = _group_norm(y, params["ln_x_scale"], params["ln_x_bias"], h)
+    y = y * jax.nn.silu(g)
+    out = y @ params["w_o"].astype(dt)
+    return out, x[:, -1], state.astype(jnp.float32)
+
+
+def channel_mix_apply(params: Params, x: Array, cfg: ArchConfig,
+                      x_prev: Array) -> Tuple[Array, Array]:
+    dt = x.dtype
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = x + (shifted - x) * params["mix_k"].astype(dt)
+    xr = x + (shifted - x) * params["mix_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ params["w_key"].astype(dt)))
+    r = jax.nn.sigmoid(xr @ params["w_receptance"].astype(dt))
+    return r * (k @ params["w_value"].astype(dt)), x[:, -1]
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Params:
+    h, n = rwkv_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "x_prev_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_prev_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "S": jnp.zeros((batch, h, n, n), jnp.float32),
+    }

@@ -1,0 +1,526 @@
+"""Unified decoder model covering all 10 assigned architectures.
+
+One ``Model`` class assembles, from an ArchConfig:
+  * dense / GQA / MQA transformer blocks (optionally sliding-window),
+  * MoE blocks (top-k capacity routing),
+  * RWKV6 blocks (attention-free),
+  * Mamba2 blocks + Zamba2's weight-shared attention block every k layers,
+  * vision / audio embedding frontends (stubs per assignment spec).
+
+API (all pure functions of params):
+  init(key) -> params
+  apply(params, batch, train) -> (logits, aux)          full-sequence forward
+  features(params, batch) -> (B, S, D) final hidden     (MOCHA bridge)
+  init_cache(batch, max_len, dtype) -> cache
+  prefill(params, batch, cache) -> (logits_last, cache)
+  decode_step(params, tokens, cache) -> (logits, cache)  one token
+
+Layer stacking uses lax.scan over stacked block params when
+``cfg.scan_layers`` (fast compiles at 32-81 layers) and a Python loop
+otherwise (reduced smoke configs); both paths are numerically identical
+(tested).  ``cfg.remat`` wraps the block body in jax.checkpoint for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.utils.pjit_utils import BATCH, constrain
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key: Array, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm),
+        "attn": L.attention_init(k1, cfg),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if cfg.is_moe:
+        p["moe"] = MOE.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def _attn_block_apply(p: Params, x: Array, cfg: ArchConfig, positions: Array,
+                      window: Optional[int], cache: Optional[Params],
+                      cache_pos: Optional[Array],
+                      moe_capacity: Optional[int] = None):
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    attn_out, new_cache = L.attention_apply(
+        p["attn"], h, cfg, positions, window=window, cache=cache,
+        cache_pos=cache_pos)
+    x = x + attn_out
+    h = L.apply_norm(p["norm2"], x, cfg.norm)
+    if cfg.is_moe:
+        ffn_out, aux = MOE.moe_apply(p["moe"], h, cfg,
+                                     capacity_override=moe_capacity)
+    else:
+        ffn_out, aux = L.mlp_apply(p["mlp"], h, cfg), {}
+    return constrain(x + ffn_out, BATCH, None, None), new_cache, aux
+
+
+def _rwkv_block_init(key: Array, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": L.norm_init(cfg.d_model, cfg.norm),
+        "time_mix": R6.time_mix_init(k1, cfg),
+        "norm2": L.norm_init(cfg.d_model, cfg.norm),
+        "channel_mix": R6.channel_mix_init(k2, cfg),
+    }
+
+
+def _rwkv_block_apply(p: Params, x: Array, cfg: ArchConfig,
+                      state: Optional[Params]):
+    if state is None:
+        b = x.shape[0]
+        state = R6.init_rwkv_state(cfg, b, dtype=x.dtype)
+        keep_state = False
+    else:
+        keep_state = True
+    h = L.apply_norm(p["norm1"], x, cfg.norm)
+    tm_out, xp_tm, s_new = R6.time_mix_apply(
+        p["time_mix"], h, cfg, state["x_prev_tm"].astype(x.dtype),
+        state["S"])
+    x = x + tm_out
+    h = L.apply_norm(p["norm2"], x, cfg.norm)
+    cm_out, xp_cm = R6.channel_mix_apply(
+        p["channel_mix"], h, cfg, state["x_prev_cm"].astype(x.dtype))
+    x = constrain(x + cm_out, BATCH, None, None)
+    new_state = ({"x_prev_tm": xp_tm, "x_prev_cm": xp_cm, "S": s_new}
+                 if keep_state else None)
+    return x, new_state, {}
+
+
+def _mamba_block_init(key: Array, cfg: ArchConfig) -> Params:
+    return {
+        "norm": L.norm_init(cfg.d_model, cfg.norm),
+        "mamba": M2.mamba2_init(key, cfg),
+    }
+
+
+def _mamba_block_apply(p: Params, x: Array, cfg: ArchConfig,
+                       state: Optional[Params]):
+    h = L.apply_norm(p["norm"], x, cfg.norm)
+    out, new_state = M2.mamba2_apply(p["mamba"], h, cfg, state)
+    return constrain(x + out, BATCH, None, None), new_state, {}
+
+
+def _shared_attn_init(key: Array, cfg: ArchConfig) -> Params:
+    """Zamba2's weight-shared transformer block (attention + MLP)."""
+    return _attn_block_init(key, dataclasses.replace(cfg, n_experts=0))
+
+
+BLOCK_INIT = {
+    "attention": _attn_block_init,
+    "rwkv6": _rwkv_block_init,
+    "mamba2": _mamba_block_init,
+}
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _merge_aux(acc: Dict[str, Array], aux: Dict[str, Array]):
+    for k, v in aux.items():
+        acc[k] = acc.get(k, 0.0) + v
+    return acc
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        if cfg.shared_attn_period:
+            self.n_periods = cfg.n_layers // cfg.shared_attn_period
+            self.n_leftover = cfg.n_layers - self.n_periods * cfg.shared_attn_period
+        else:
+            self.n_periods = 0
+            self.n_leftover = 0
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: Array) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.n_layers + 6)
+        block_init = BLOCK_INIT[cfg.block_type]
+        blocks = [block_init(keys[i], cfg) for i in range(cfg.n_layers)]
+        params: Params = {"final_norm": L.norm_init(cfg.d_model, cfg.norm)}
+
+        if cfg.family == "audio":
+            params["embed"] = jnp.stack([
+                L.embed_init(k, cfg.vocab_size, cfg.d_model)
+                for k in jax.random.split(keys[-1], cfg.n_codebooks)])
+            params["lm_head"] = L.dense_init(
+                keys[-2], cfg.d_model, cfg.n_codebooks * cfg.vocab_size)
+        else:
+            params["embed"] = L.embed_init(keys[-1], cfg.vocab_size,
+                                           cfg.d_model)
+            if not cfg.tie_embeddings:
+                params["lm_head"] = L.dense_init(keys[-2], cfg.d_model,
+                                                 cfg.vocab_size)
+
+        if cfg.shared_attn_period:
+            params["shared"] = _shared_attn_init(keys[-3], cfg)
+            params["shared_proj"] = jnp.stack([
+                L.dense_init(k, 2 * cfg.d_model, cfg.d_model)
+                for k in jax.random.split(keys[-4], self.n_periods)])
+
+        if cfg.scan_layers:
+            if cfg.shared_attn_period:
+                main = blocks[:self.n_periods * cfg.shared_attn_period]
+                rest = blocks[self.n_periods * cfg.shared_attn_period:]
+                grouped = [
+                    jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs),
+                        *main[i * cfg.shared_attn_period:
+                              (i + 1) * cfg.shared_attn_period])
+                    for i in range(self.n_periods)]
+                params["blocks"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *grouped)
+                params["tail_blocks"] = (jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *rest) if rest else None)
+            else:
+                params["blocks"] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *blocks)
+        else:
+            params["blocks"] = blocks
+        return params
+
+    # -- embedding ----------------------------------------------------------
+    def embed(self, params: Params, batch: Dict[str, Array],
+              dtype=jnp.float32) -> Tuple[Array, Array]:
+        """Returns (hidden (B,S,D), positions (B,S))."""
+        cfg = self.cfg
+        # cast the table BEFORE the gather: the embedding all-gather then
+        # moves bf16, not f32 (halves traffic + transient -- §Perf)
+        if cfg.family == "audio":
+            tok = batch["tokens"]                 # (B, S, n_codebooks)
+            table = params["embed"].astype(dtype)
+            embs = [table[i][tok[..., i]] for i in range(cfg.n_codebooks)]
+            h = sum(embs)
+            b, s = tok.shape[:2]
+        elif cfg.family == "vlm":
+            tok = batch["tokens"]                 # (B, S_text)
+            img = batch["image_embeds"].astype(dtype)   # (B, P, D)
+            txt = params["embed"].astype(dtype)[tok]
+            h = jnp.concatenate([img, txt], axis=1)
+            b, s = h.shape[:2]
+        else:
+            tok = batch["tokens"]                 # (B, S)
+            h = params["embed"].astype(dtype)[tok]
+            b, s = tok.shape[:2]
+        start = batch.get("start_pos", jnp.zeros((b,), jnp.int32))
+        positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+        # anchor activation sharding: batch over the data axes (GSPMD cannot
+        # infer this through the embedding gather -- measured 750 GB/device
+        # temp without it, see EXPERIMENTS.md)
+        h = constrain(h, BATCH, None, None)
+        return h, positions
+
+    # -- block runners -------------------------------------------------------
+    def _run_attn_stack(self, params, x, positions, window, caches,
+                        cache_pos, train, moe_capacity=None):
+        cfg = self.cfg
+        aux: Dict[str, Array] = {}
+
+        def body(x, blk, cache):
+            return _attn_block_apply(blk, x, cfg, positions, window, cache,
+                                     cache_pos, moe_capacity)
+
+        if cfg.remat and train:
+            body = jax.checkpoint(body)
+
+        if cfg.scan_layers:
+            aux0 = ({"moe_lb": jnp.float32(0), "moe_z": jnp.float32(0),
+                     "moe_drop_frac": jnp.float32(0)} if cfg.is_moe else {})
+
+            def scan_fn(carry, inp):
+                x, aux_acc = carry
+                blk, cache = inp
+                x, new_cache, aux_i = body(x, blk, cache)
+                if aux_i:
+                    aux_acc = jax.tree_util.tree_map(
+                        lambda a, b: a + b, aux_acc, aux_i)
+                return (x, aux_acc), new_cache
+
+            if caches is not None:
+                (x, aux), new_caches = jax.lax.scan(
+                    scan_fn, (x, aux0), (params["blocks"], caches))
+            else:
+                def no_cache_fn(carry, blk):
+                    new_carry, _ = scan_fn(carry, (blk, None))
+                    return new_carry, None
+
+                (x, aux), _ = jax.lax.scan(no_cache_fn, (x, aux0),
+                                           params["blocks"])
+                new_caches = None
+            if cfg.is_moe:
+                aux = {k: v / cfg.n_layers for k, v in aux.items()}
+            return x, new_caches, aux
+        else:
+            new_caches = []
+            for i, blk in enumerate(params["blocks"]):
+                cache_i = caches[i] if caches is not None else None
+                x, nc, aux_i = body(x, blk, cache_i)
+                aux = _merge_aux(aux, aux_i)
+                new_caches.append(nc)
+            if cfg.is_moe and aux:
+                aux = {k: v / cfg.n_layers for k, v in aux.items()}
+            return x, (new_caches if caches is not None else None), aux
+
+    def _run_rwkv_stack(self, params, x, states, train):
+        cfg = self.cfg
+
+        def body(x, blk, st):
+            return _rwkv_block_apply(blk, x, cfg, st)
+
+        if cfg.remat and train:
+            body = jax.checkpoint(body)
+
+        if cfg.scan_layers:
+            def scan_fn(x, inp):
+                blk, st = (inp if states is not None else (inp, None))
+                x, new_st, _ = body(x, blk, st)
+                return x, new_st
+
+            xs = ((params["blocks"], states) if states is not None
+                  else params["blocks"])
+            x, new_states = jax.lax.scan(scan_fn, x, xs)
+            return x, (new_states if states is not None else None), {}
+        new_states = []
+        for i, blk in enumerate(params["blocks"]):
+            st = states[i] if states is not None else None
+            x, ns, _ = body(x, blk, st)
+            new_states.append(ns)
+        return x, (new_states if states is not None else None), {}
+
+    def _run_hybrid_stack(self, params, x, x0, positions, caches, cache_pos,
+                          train):
+        """Zamba2: periods of `shared_attn_period` mamba blocks followed by
+        the weight-shared attention block through an unshared 2D->D proj."""
+        cfg = self.cfg
+        period = cfg.shared_attn_period
+        shared = params["shared"]
+
+        def mamba_body(x, blk, st):
+            return _mamba_block_apply(blk, x, cfg, st)
+
+        def shared_body(x, proj, cache):
+            inp = jnp.concatenate([x, x0], axis=-1) @ proj.astype(x.dtype)
+            out, new_cache, _ = _attn_block_apply(
+                shared, inp, cfg, positions, None, cache, cache_pos)
+            return x + out, new_cache
+
+        has_cache = caches is not None
+        if cfg.scan_layers:
+            def period_fn(x, inp):
+                if has_cache:
+                    blks, proj, m_caches, s_cache = inp
+                else:
+                    blks, proj = inp
+                    m_caches = s_cache = None
+                new_m = []
+                for j in range(period):
+                    blk_j = jax.tree_util.tree_map(lambda a: a[j], blks)
+                    st_j = (jax.tree_util.tree_map(lambda a: a[j], m_caches)
+                            if has_cache else None)
+                    x, ns, _ = mamba_body(x, blk_j, st_j)
+                    new_m.append(ns)
+                x, new_s = shared_body(x, proj, s_cache)
+                if has_cache:
+                    stacked = jax.tree_util.tree_map(
+                        lambda *a: jnp.stack(a), *new_m)
+                    return x, (stacked, new_s)
+                return x, None
+
+            xs = ((params["blocks"], params["shared_proj"],
+                   caches["mamba"], caches["shared"]) if has_cache
+                  else (params["blocks"], params["shared_proj"]))
+            # checkpoint whole periods: the period scan then saves one bf16
+            # (B,S,D) residual per period instead of every intermediate
+            body = (jax.checkpoint(period_fn) if (cfg.remat and train)
+                    else period_fn)
+            x, new_caches = jax.lax.scan(body, x, xs)
+            new_tail = []
+            if params.get("tail_blocks") is not None:
+                tail_body = (jax.checkpoint(mamba_body)
+                             if (cfg.remat and train) else mamba_body)
+                for j in range(self.n_leftover):
+                    blk_j = jax.tree_util.tree_map(lambda a: a[j],
+                                                   params["tail_blocks"])
+                    st_j = (jax.tree_util.tree_map(lambda a: a[j],
+                                                   caches["tail"])
+                            if has_cache else None)
+                    x, ns, _ = tail_body(x, blk_j, st_j)
+                    new_tail.append(ns)
+            if has_cache:
+                m_stack, s_stack = new_caches
+                out_cache = {"mamba": m_stack, "shared": s_stack,
+                             "tail": (jax.tree_util.tree_map(
+                                 lambda *a: jnp.stack(a), *new_tail)
+                                 if new_tail else None)}
+                return x, out_cache, {}
+            return x, None, {}
+
+        if cfg.remat and train:
+            mamba_body = jax.checkpoint(mamba_body)
+            shared_body = jax.checkpoint(shared_body)
+        # python-loop path (reduced configs)
+        new_m, new_s, new_tail = [], [], []
+        si = 0
+        for i in range(cfg.n_layers):
+            st = caches["mamba"][i] if has_cache else None
+            x, ns, _ = mamba_body(x, params["blocks"][i], st)
+            new_m.append(ns)
+            if period and (i + 1) % period == 0 and si < self.n_periods:
+                s_cache = caches["shared"][si] if has_cache else None
+                x, nsc = shared_body(x, params["shared_proj"][si], s_cache)
+                new_s.append(nsc)
+                si += 1
+        if has_cache:
+            return x, {"mamba": new_m, "shared": new_s, "tail": None}, {}
+        return x, None, {}
+
+    # -- public forward APIs ---------------------------------------------------
+    def _backbone(self, params, batch, caches, cache_pos, train,
+                  dtype=jnp.float32, moe_capacity=None):
+        cfg = self.cfg
+        x, positions = self.embed(params, batch, dtype)
+        if cfg.block_type == "attention":
+            x, new_caches, aux = self._run_attn_stack(
+                params, x, positions, cfg.sliding_window, caches, cache_pos,
+                train, moe_capacity)
+        elif cfg.block_type == "rwkv6":
+            x, new_caches, aux = self._run_rwkv_stack(params, x, caches,
+                                                      train)
+        elif cfg.block_type == "mamba2" and cfg.shared_attn_period:
+            x, new_caches, aux = self._run_hybrid_stack(
+                params, x, x, positions, caches, cache_pos, train)
+        else:
+            raise ValueError(cfg.block_type)
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        return x, new_caches, aux
+
+    def logits(self, params: Params, h: Array) -> Array:
+        cfg = self.cfg
+        dt = h.dtype
+        if cfg.family == "audio":
+            out = h @ params["lm_head"].astype(dt)
+            out = out.reshape(*h.shape[:-1], cfg.n_codebooks, cfg.vocab_size)
+            return constrain(out, BATCH, *([None] * (out.ndim - 2)), "model")
+        if cfg.tie_embeddings:
+            out = h @ params["embed"].T.astype(dt)
+        else:
+            out = h @ params["lm_head"].astype(dt)
+        return constrain(out, BATCH, *([None] * (out.ndim - 2)), "model")
+
+    def apply(self, params: Params, batch: Dict[str, Array],
+              train: bool = True, dtype=jnp.float32):
+        h, _, aux = self._backbone(params, batch, None, None, train, dtype)
+        return self.logits(params, h), aux
+
+    def features(self, params: Params, batch: Dict[str, Array],
+                 dtype=jnp.float32) -> Array:
+        h, _, _ = self._backbone(params, batch, None, None, False, dtype)
+        return h
+
+    # -- caches / serving -----------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+
+        def attn_cache():
+            return L.init_attn_cache(cfg, batch_size, max_len,
+                                     window=cfg.sliding_window, dtype=dtype)
+
+        if cfg.block_type == "attention":
+            per_layer = [attn_cache() for _ in range(cfg.n_layers)]
+            blocks = (jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                             *per_layer)
+                      if cfg.scan_layers else per_layer)
+        elif cfg.block_type == "rwkv6":
+            per_layer = [R6.init_rwkv_state(cfg, batch_size, dtype)
+                         for _ in range(cfg.n_layers)]
+            blocks = (jax.tree_util.tree_map(lambda *a: jnp.stack(a),
+                                             *per_layer)
+                      if cfg.scan_layers else per_layer)
+        else:  # hybrid
+            m_states = [M2.init_mamba_state(cfg, batch_size, dtype)
+                        for _ in range(cfg.n_layers)]
+            full_attn = dataclasses.replace(cfg, sliding_window=None)
+            s_caches = [L.init_attn_cache(full_attn, batch_size, max_len,
+                                          dtype=dtype)
+                        for _ in range(self.n_periods)]
+            if cfg.scan_layers:
+                n_scan = self.n_periods * cfg.shared_attn_period
+                grouped = [jax.tree_util.tree_map(
+                    lambda *a: jnp.stack(a),
+                    *m_states[i * cfg.shared_attn_period:
+                              (i + 1) * cfg.shared_attn_period])
+                    for i in range(self.n_periods)]
+                blocks = {
+                    "mamba": jax.tree_util.tree_map(
+                        lambda *a: jnp.stack(a), *grouped),
+                    "shared": jax.tree_util.tree_map(
+                        lambda *a: jnp.stack(a), *s_caches),
+                    "tail": (jax.tree_util.tree_map(
+                        lambda *a: jnp.stack(a), *m_states[n_scan:])
+                        if self.n_leftover else None),
+                }
+            else:
+                blocks = {"mamba": m_states, "shared": s_caches,
+                          "tail": None}
+        return {"blocks": blocks, "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+    def prefill(self, params: Params, batch: Dict[str, Array], cache: Params,
+                dtype=jnp.bfloat16):
+        cfg = self.cfg
+        b = cache["pos"].shape[0]
+        batch = dict(batch)
+        batch["start_pos"] = cache["pos"]
+        h, new_blocks, _ = self._backbone(
+            params, batch, cache["blocks"], cache["pos"], False, dtype)
+        if cfg.family == "audio":
+            s = batch["tokens"].shape[1]
+        elif cfg.family == "vlm":
+            s = batch["tokens"].shape[1] + batch["image_embeds"].shape[1]
+        else:
+            s = batch["tokens"].shape[1]
+        logits_last = self.logits(params, h[:, -1])
+        return logits_last, {"blocks": new_blocks,
+                             "pos": cache["pos"] + s}
+
+    def decode_step(self, params: Params, tokens: Array, cache: Params,
+                    dtype=jnp.bfloat16):
+        """tokens: (B,) int32 (audio: (B, n_codebooks))."""
+        cfg = self.cfg
+        batch = {"tokens": tokens[:, None]}
+        if cfg.family == "vlm":
+            b = tokens.shape[0]
+            batch["image_embeds"] = jnp.zeros((b, 0, cfg.d_model), dtype)
+        batch["start_pos"] = cache["pos"]
+        # dropless routing for decode: T = batch tokens, must be exact
+        h, new_blocks, _ = self._backbone(
+            params, batch, cache["blocks"], cache["pos"], False, dtype,
+            moe_capacity=tokens.shape[0] if cfg.is_moe else None)
+        logits = self.logits(params, h[:, -1])
+        return logits, {"blocks": new_blocks, "pos": cache["pos"] + 1}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,78 @@
+"""Batched serving engine: prefill once, then jit-compiled decode steps.
+
+The engine wraps a Model with sampling, early-stop bookkeeping, and cache
+management; the launcher adds shardings for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 256
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> no truncation
+    cache_dtype: Any = jnp.float32
+    seed: int = 0
+
+
+def sample_logits(logits: Array, key: Array, temperature: float,
+                  top_k: int) -> Array:
+    """logits: (B, V) (audio: (B, C, V)); returns int32 token ids."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    def __init__(self, model: Model, sc: ServeConfig):
+        self.model = model
+        self.sc = sc
+        self._decode_jit = jax.jit(self._decode_body)
+
+    def _decode_body(self, params, tokens, cache, key):
+        logits, cache = self.model.decode_step(
+            params, tokens, cache, dtype=self.sc.cache_dtype)
+        key, sub = jax.random.split(key)
+        nxt = sample_logits(logits, sub, self.sc.temperature, self.sc.top_k)
+        return nxt, cache, key
+
+    def generate(self, params, batch: Dict[str, Array],
+                 n_new: Optional[int] = None) -> np.ndarray:
+        """Prefill the prompt batch and decode n_new tokens.
+
+        Returns generated ids: (B, n_new) (audio: (B, n_new, C))."""
+        sc = self.sc
+        cfg = self.model.cfg
+        n_new = n_new or sc.max_new_tokens
+        if cfg.family == "audio":
+            bsz = batch["tokens"].shape[0]
+        else:
+            bsz = batch["tokens"].shape[0]
+        cache = self.model.init_cache(bsz, sc.max_len, dtype=sc.cache_dtype)
+        logits, cache = self.model.prefill(params, batch, cache,
+                                           dtype=sc.cache_dtype)
+        key = jax.random.PRNGKey(sc.seed)
+        key, sub = jax.random.split(key)
+        tok = sample_logits(logits, sub, sc.temperature, sc.top_k)
+        out: List[np.ndarray] = [np.asarray(tok)]
+        for _ in range(n_new - 1):
+            tok, cache, key = self._decode_jit(params, tok, cache, key)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)

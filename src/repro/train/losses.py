@@ -1,0 +1,57 @@
+"""Language-model training losses (next-token CE + MoE auxiliaries).
+
+CE is computed as logsumexp(logits) - <logits, onehot(label)> rather than
+log_softmax + take_along_axis: the gather form forces GSPMD to all-gather the
+vocab-sharded logits (gigabytes at 256k vocab), while the lse/one-hot form
+keeps every term sharded over the ``model`` axis and reduces with a cheap
+all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+
+def _sharded_ce(logits: Array, labels: Array) -> Array:
+    """logits: (..., V) (any dtype), labels: (...) int32. Mean CE, f32."""
+    vocab = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, vocab, dtype=logits.dtype)
+    label_logit = jnp.einsum("...v,...v->...", logits, onehot,
+                             preferred_element_type=jnp.float32)
+    return jnp.mean(lse - label_logit)
+
+
+def next_token_loss(cfg: ArchConfig, logits: Array, batch: Dict[str, Array],
+                    aux: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    """Shifted cross-entropy.
+
+    dense/moe/ssm: logits (B, S, V), labels = tokens shifted left.
+    vlm: loss only over text positions (image prefix predicts nothing).
+    audio: logits (B, S, C, V), per-codebook CE summed.
+    """
+    tokens = batch["tokens"]
+    if cfg.family == "audio":
+        # (B, S-1, C, V) vs (B, S-1, C)
+        ce = _sharded_ce(logits[:, :-1], tokens[:, 1:]) * cfg.n_codebooks
+    elif cfg.family == "vlm":
+        n_text = tokens.shape[1]
+        text_logits = logits[:, -n_text:]
+        ce = _sharded_ce(text_logits[:, :-1], tokens[:, 1:])
+    else:
+        ce = _sharded_ce(logits[:, :-1], tokens[:, 1:])
+
+    metrics = {"ce": ce}
+    total = ce
+    for k, v in aux.items():
+        metrics[k] = v
+        if k in ("moe_lb", "moe_z"):
+            total = total + v
+    metrics["loss"] = total
+    return total, metrics

@@ -1,0 +1,137 @@
+"""Optimizers from scratch (no optax in this container): AdamW, SGD+momentum,
+global-norm clipping, and LR schedules. Optimizer state is a pytree shaped
+like params, so it inherits parameter shardings (ZeRO-style) under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Params
+    nu: Params
+    master: Params | None = None  # f32 masters when params live in bf16
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """AdamW with optional f32 master weights.
+
+    master_weights=True is the production mixed-precision mode: the params
+    pytree itself is bf16 (so EVERY resharding collective -- FSDP weight
+    all-gathers, gradient reductions -- moves 2-byte data), while the
+    optimizer carries the f32 masters and applies the update there.
+    """
+
+    lr: float | Callable[[Array], Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    master_weights: bool = False
+
+    def init(self, params: Params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        master = (jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+            if self.master_weights else None)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(f32, params),
+                          nu=jax.tree_util.tree_map(f32, params),
+                          master=master)
+
+    def _lr(self, step: Array) -> Array:
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads: Params, state: AdamWState, params: Params,
+               ) -> Tuple[Params, AdamWState]:
+        step = state.step + 1
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                             + self.weight_decay * p)
+
+        anchor = state.master if self.master_weights else params
+        new_anchor = jax.tree_util.tree_map(upd, anchor, mu, nu)
+        if self.master_weights:
+            new_params = jax.tree_util.tree_map(
+                lambda a, p: a.astype(p.dtype), new_anchor, params)
+            return new_params, AdamWState(step=step, mu=mu, nu=nu,
+                                          master=new_anchor)
+        return new_anchor, AdamWState(step=step, mu=mu, nu=nu, master=None)
+
+
+class SGDState(NamedTuple):
+    step: Array
+    momentum: Params
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float | Callable[[Array], Array] = 1e-2
+    momentum: float = 0.9
+    clip_norm: float | None = None
+
+    def init(self, params: Params) -> SGDState:
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        momentum=jax.tree_util.tree_map(jnp.zeros_like,
+                                                        params))
+
+    def update(self, grads: Params, state: SGDState, params: Params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+        mom = jax.tree_util.tree_map(
+            lambda m, g: self.momentum * m + g, state.momentum, grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - lr * m, params, mom)
+        return new_params, SGDState(step=step, momentum=mom)
+
+
+def global_norm(tree: Params) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float) -> Params:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[Array], Array]:
+    def fn(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,92 @@
+"""Mesh-aware activation sharding constraints.
+
+Model code calls ``constrain(x, BATCH, None, 'model')`` unconditionally; the
+constraint is applied only while tracing inside an ``activation_sharding``
+context (entered by the launcher / dry-run around ``jit(...).lower``).  The
+context carries the *batch axes* chosen for the case (e.g. full-FSDP
+``('data','model')`` for train_4k on one pod, ``('pod','data')`` multi-pod):
+the BATCH sentinel resolves to exactly those axes, and any named axis already
+consumed by BATCH is dropped from later dims (an axis may appear only once in
+a PartitionSpec).  The single-device test path never enters the context, so
+constraints are a no-op there.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+class _BatchSentinel:
+    def __repr__(self):
+        return "BATCH"
+
+
+#: placeholder resolved to the context's batch axes
+BATCH = _BatchSentinel()
+
+AxisName = Union[str, Sequence[str], None, _BatchSentinel]
+
+# (axis name set, batch axes, batch shard product, axis sizes)
+_CTX: ContextVar[Optional[tuple]] = ContextVar("repro_mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: Sequence[str]):
+    """Enable activation constraints: mesh axis names + chosen batch axes."""
+    axes = frozenset(mesh.axis_names)
+    batch = tuple(a for a in batch_axes if a in axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prod = 1
+    for a in batch:
+        prod *= sizes[a]
+    token = _CTX.set((axes, batch, prod, sizes))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_batch_axes() -> Optional[Tuple[str, ...]]:
+    ctx = _CTX.get()
+    return ctx[1] if ctx else None
+
+
+def batch_shard_count() -> int:
+    """Number of batch-parallel shards (GShard 'groups' for MoE routing);
+    1 outside a mesh context."""
+    ctx = _CTX.get()
+    return ctx[2] if ctx else 1
+
+
+def constrain(x: jax.Array, *spec: AxisName) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    axes, batch, _, sizes = ctx
+    used: set = set()
+    resolved = []
+    for dim, s in enumerate(spec):
+        size = x.shape[dim]
+        if s is None:
+            resolved.append(None)
+            continue
+        if isinstance(s, _BatchSentinel):
+            cands = tuple(a for a in batch if a not in used)
+        elif isinstance(s, str):
+            cands = (s,) if s in axes and s not in used else ()
+        else:
+            cands = tuple(a for a in s if a in axes and a not in used)
+        # keep only a prefix of candidate axes whose product divides the dim
+        keep = []
+        prod = 1
+        for a in cands:
+            if size % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        used.update(keep)
+        resolved.append(tuple(keep) if keep else None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

@@ -1,0 +1,59 @@
+"""Synthetic federation generators: shapes, packing, Table-2/3 calibration."""
+import numpy as np
+import pytest
+
+from repro.data import synthetic as syn
+
+
+@pytest.mark.parametrize("spec", [syn.HUMAN_ACTIVITY, syn.GOOGLE_GLASS,
+                                  syn.VEHICLE_SENSOR],
+                         ids=lambda s: s.name)
+def test_table2_calibration(spec):
+    train, test = syn.make_federation(spec, seed=0)
+    assert train.m == spec.m and train.d == spec.d
+    n_t = np.asarray(train.n_t) + np.asarray(test.n_t)
+    assert n_t.min() >= spec.n_min - 1
+    assert n_t.max() <= spec.n_max + 1
+
+
+@pytest.mark.parametrize("spec", [syn.HA_SKEW, syn.GG_SKEW, syn.VS_SKEW],
+                         ids=lambda s: s.name)
+def test_table3_skew(spec):
+    train, test = syn.make_federation(spec, seed=0)
+    n_t = np.asarray(train.n_t) + np.asarray(test.n_t)
+    # sizes should span well over an order of magnitude
+    assert n_t.max() / max(n_t.min(), 1) > 10
+
+
+def test_left_packed_masks():
+    train, _ = syn.make_federation(syn.HUMAN_ACTIVITY, seed=1)
+    m = np.asarray(train.mask)
+    for t in range(train.m):
+        n = int(m[t].sum())
+        assert np.all(m[t, :n] == 1.0) and np.all(m[t, n:] == 0.0)
+
+
+def test_padding_is_zeroed():
+    train, _ = syn.make_federation(syn.GOOGLE_GLASS, seed=1)
+    pad = np.asarray(train.mask) == 0.0
+    assert np.all(np.asarray(train.y)[pad] == 0.0)
+    assert np.all(np.asarray(train.X)[pad] == 0.0)
+
+
+def test_labels_are_binary():
+    train, _ = syn.make_federation(syn.VEHICLE_SENSOR, seed=2)
+    y = np.asarray(train.y)[np.asarray(train.mask) == 1.0]
+    assert set(np.unique(y)).issubset({-1.0, 1.0})
+
+
+def test_cluster_structure_learnable():
+    """Tasks in the same latent cluster have correlated true labels under a
+    shared linear probe -- MTL has something to find."""
+    train, test = syn.tiny_problem(m=6, n=40, d=8, seed=0, clusters=2)
+    assert train.m == 6
+
+
+def test_deterministic_given_seed():
+    a, _ = syn.make_federation(syn.HUMAN_ACTIVITY, seed=42)
+    b, _ = syn.make_federation(syn.HUMAN_ACTIVITY, seed=42)
+    np.testing.assert_array_equal(np.asarray(a.X), np.asarray(b.X))

@@ -1,0 +1,89 @@
+"""Dual/primal algebra: gap nonnegativity, w(alpha) map, global-problem pooling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (MeanRegularized, compute_v, dual_objective,
+                        duality_gap, get_loss, primal_objective,
+                        primal_weights, r_star)
+from repro.data.synthetic import make_global_problem, tiny_problem
+
+
+@pytest.fixture(scope="module")
+def setup():
+    train, _ = tiny_problem(m=4, n=20, d=6, seed=2)
+    reg = MeanRegularized(0.6, 0.4)
+    abar = reg.coupling(reg.init_omega(train.m))
+    K = reg.K(reg.init_omega(train.m))
+    return train, abar, K
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       loss_name=st.sampled_from(["hinge", "smooth_hinge", "logistic"]))
+def test_gap_nonnegative_at_feasible_points(seed, loss_name):
+    """Weak duality: gap(alpha) >= 0 for any feasible alpha."""
+    train, _ = tiny_problem(m=3, n=12, d=5, seed=7)
+    reg = MeanRegularized(0.6, 0.4)
+    omega = reg.init_omega(train.m)
+    abar, K = reg.coupling(omega), reg.K(omega)
+    loss = get_loss(loss_name)
+    rng = np.random.default_rng(seed)
+    frac = jnp.asarray(rng.random(train.y.shape), jnp.float32)
+    alpha = frac * train.y * train.mask
+    v = compute_v(train, alpha)
+    gap = duality_gap(train, loss, abar, K, alpha, v)
+    assert float(gap) >= -1e-3
+
+
+def test_rstar_quadratic_identity(setup):
+    """R*(X alpha) == (1/4) vec(v)^T (K kron I) vec(v), checked densely."""
+    train, abar, K = setup
+    rng = np.random.default_rng(0)
+    alpha = jnp.asarray(rng.normal(0, 1, train.y.shape), jnp.float32) * train.mask
+    v = compute_v(train, alpha)
+    dense = 0.0
+    vn = np.asarray(v)
+    Kn = np.asarray(K)
+    for t in range(train.m):
+        for s in range(train.m):
+            dense += 0.25 * Kn[t, s] * float(vn[t] @ vn[s])
+    np.testing.assert_allclose(float(r_star(K, v)), dense, rtol=1e-4)
+
+
+def test_w_map_is_gradient_of_rstar(setup):
+    """W(alpha) rows = d R*(v) / d v_t (autodiff cross-check)."""
+    train, abar, K = setup
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.normal(0, 1, (train.m, train.d)), jnp.float32)
+    W = primal_weights(K, v)
+    grad = jax.grad(lambda vv: r_star(K, vv))(v)
+    # dR*/dv_t = (1/2) sum_s K_ts v_s = w_t
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(W), atol=1e-5)
+
+
+def test_primal_regularizer_matches_quadratic_form(setup):
+    train, abar, K = setup
+    rng = np.random.default_rng(2)
+    W = jnp.asarray(rng.normal(0, 1, (train.m, train.d)), jnp.float32)
+    loss = get_loss("hinge")
+    p = primal_objective(train, loss, abar, W)
+    # recompute by hand
+    z = np.einsum("tid,td->ti", np.asarray(train.X), np.asarray(W))
+    manual = float(np.sum(np.maximum(0, 1 - np.asarray(train.y) * z)
+                          * np.asarray(train.mask)))
+    manual += float(np.einsum("td,ts,sd->", np.asarray(W), np.asarray(abar),
+                              np.asarray(W)))
+    np.testing.assert_allclose(float(p), manual, rtol=1e-5)
+
+
+def test_global_pooling_preserves_points():
+    train, _ = tiny_problem(m=4, n=20, d=6, seed=2)
+    g = make_global_problem(train)
+    assert g.m == 1
+    np.testing.assert_allclose(float(g.n_total), float(train.n_total))
+    np.testing.assert_allclose(np.asarray(g.X).sum(), np.asarray(train.X).sum(),
+                               rtol=1e-6)

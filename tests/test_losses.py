@@ -1,0 +1,105 @@
+"""Unit + property tests for losses and their conjugate duals."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.losses import LOSSES, get_loss
+
+BINARY_LOSSES = ["hinge", "smooth_hinge", "logistic"]
+ALL_LOSSES = list(LOSSES)
+
+
+def _feasible_alpha(loss_name, y, frac):
+    """Map frac in [0,1] to a dual-feasible alpha for the loss."""
+    if loss_name == "squared":
+        return (frac * 4.0 - 2.0)  # unconstrained
+    return frac * y  # a*y in [0, 1]
+
+
+@pytest.mark.parametrize("name", ALL_LOSSES)
+def test_fenchel_young_inequality(name):
+    """l(z, y) + l*(-a, y) >= -a z on the feasible region."""
+    loss = get_loss(name)
+    rng = np.random.default_rng(0)
+    z = rng.normal(0, 2, 200).astype(np.float32)
+    y = np.where(rng.random(200) < 0.5, -1.0, 1.0).astype(np.float32)
+    if name == "squared":
+        y = rng.normal(0, 1, 200).astype(np.float32)
+    a = _feasible_alpha(name, y, rng.random(200).astype(np.float32))
+    lhs = np.asarray(loss.value(jnp.asarray(z), jnp.asarray(y))
+                     + loss.conjugate_neg(jnp.asarray(a), jnp.asarray(y)))
+    rhs = -a * z
+    assert np.all(lhs >= rhs - 1e-4)
+
+
+@pytest.mark.parametrize("name", ALL_LOSSES)
+def test_conjugate_tightness(name):
+    """sup_z -a z - l(z, y) is attained: conjugate equals numeric sup."""
+    loss = get_loss(name)
+    y = jnp.asarray(1.0)
+    zs = jnp.linspace(-30, 30, 20001)
+    for frac in [0.1, 0.5, 0.9]:
+        a = jnp.asarray(_feasible_alpha(name, 1.0, frac))
+        numeric = jnp.max(-a * zs - loss.value(zs, y))
+        exact = loss.conjugate_neg(a, y)
+        np.testing.assert_allclose(numeric, exact, atol=5e-3)
+
+
+@pytest.mark.parametrize("name", ALL_LOSSES)
+def test_sdca_delta_minimizes_coordinate_objective(name):
+    """Closed-form delta beats a dense grid of feasible deltas."""
+    loss = get_loss(name)
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        y = jnp.asarray(1.0 if rng.random() < 0.5 else -1.0)
+        if name == "squared":
+            y = jnp.asarray(float(rng.normal()))
+        a = jnp.asarray(_feasible_alpha(name, float(y), float(rng.random())))
+        xg = jnp.asarray(float(rng.normal(0, 2)))
+        qxx = jnp.asarray(float(rng.uniform(0.05, 5.0)))
+
+        def obj(delta):
+            return (loss.conjugate_neg(a + delta, y)
+                    + delta * xg + 0.5 * qxx * delta * delta)
+
+        delta = loss.sdca_delta(a, y, xg, qxx)
+        # grid of feasible deltas
+        if name == "squared":
+            grid = jnp.linspace(-10, 10, 4001)
+        else:
+            abar = a * y
+            grid = (jnp.linspace(0, 1, 2001) - abar) * y
+        vals = jax.vmap(obj)(grid)
+        assert float(obj(delta)) <= float(jnp.min(vals)) + 1e-3
+
+
+@settings(max_examples=50, deadline=None)
+@given(frac=st.floats(0.0, 1.0), ypos=st.booleans(),
+       xg=st.floats(-5.0, 5.0), qxx=st.floats(0.01, 10.0),
+       name=st.sampled_from(ALL_LOSSES))
+def test_sdca_delta_feasible_and_descending(frac, ypos, xg, qxx, name):
+    """Property: updates stay dual-feasible and never increase the objective."""
+    loss = get_loss(name)
+    y = jnp.asarray(1.0 if ypos else -1.0)
+    a = jnp.asarray(_feasible_alpha(name, float(y), frac))
+    delta = loss.sdca_delta(a, y, jnp.asarray(xg), jnp.asarray(qxx))
+    a_new = a + delta
+    if name != "squared":
+        assert -1e-5 <= float(a_new * y) <= 1.0 + 1e-5
+    before = loss.conjugate_neg(a, y)
+    after = (loss.conjugate_neg(a_new, y) + delta * xg
+             + 0.5 * qxx * delta * delta)
+    assert float(after) <= float(before) + 1e-4
+
+
+@pytest.mark.parametrize("name", BINARY_LOSSES)
+def test_loss_nonnegative_and_zero_when_confident(name):
+    loss = get_loss(name)
+    z = jnp.asarray([5.0, -5.0])
+    y = jnp.asarray([1.0, -1.0])
+    vals = loss.value(z, y)
+    assert np.all(np.asarray(vals) >= -1e-6)
+    assert np.all(np.asarray(vals) < 0.05)

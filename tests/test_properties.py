@@ -1,0 +1,92 @@
+"""Cross-cutting hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.regularizers import spd_inverse
+from repro.models.layers import apply_rope
+from repro.train.optimizer import AdamW, clip_by_global_norm, global_norm
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), shift=st.integers(0, 64))
+def test_rope_relative_position_invariance(seed, shift):
+    """RoPE property: <q_i, k_j> depends only on i - j (shift invariance)."""
+    rng = np.random.default_rng(seed)
+    d = 8
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 1, d)), jnp.float32)
+    pos = jnp.asarray([[3, 7]], jnp.int32)
+    q1 = apply_rope(q, pos, 10_000.0)
+    k1 = apply_rope(k, pos, 10_000.0)
+    q2 = apply_rope(q, pos + shift, 10_000.0)
+    k2 = apply_rope(k, pos + shift, 10_000.0)
+    dot1 = jnp.einsum("bshd,bthd->st", q1, k1)
+    dot2 = jnp.einsum("bshd,bthd->st", q2, k2)
+    np.testing.assert_allclose(np.asarray(dot1), np.asarray(dot2), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(2, 10))
+def test_spd_inverse_property(seed, m):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (m, m))
+    spd = jnp.asarray(a @ a.T + np.eye(m), jnp.float32)
+    inv = spd_inverse(spd)
+    np.testing.assert_allclose(np.asarray(spd @ inv), np.eye(m), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), max_norm=st.floats(0.1, 10.0))
+def test_clip_never_increases_norm(seed, max_norm):
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(0, 5, 7), jnp.float32),
+         "b": jnp.asarray(rng.normal(0, 5, (3, 3)), jnp.float32)}
+    before = float(global_norm(g))
+    after = float(global_norm(clip_by_global_norm(g, max_norm)))
+    assert after <= max(before, max_norm) + 1e-4
+    assert after <= max_norm + 1e-4 or after <= before + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_master_weights_track_plain_adamw(seed):
+    """bf16-resident params + f32 masters must follow the f32 trajectory."""
+    rng = np.random.default_rng(seed)
+    w0 = rng.normal(0, 1, (8,)).astype(np.float32)
+    plain = AdamW(lr=0.05, weight_decay=0.01, clip_norm=None)
+    mixed = AdamW(lr=0.05, weight_decay=0.01, clip_norm=None,
+                  master_weights=True)
+    p1 = {"w": jnp.asarray(w0)}
+    p2 = {"w": jnp.asarray(w0, jnp.bfloat16)}
+    s1, s2 = plain.init(p1), mixed.init(p2)
+    for i in range(20):
+        g = jnp.asarray(rng.normal(0, 1, (8,)), jnp.float32)
+        p1, s1 = plain.update({"w": g}, s1, p1)
+        p2, s2 = mixed.update({"w": g.astype(jnp.bfloat16)}, s2, p2)
+    # masters follow the f32 path within bf16 gradient noise
+    np.testing.assert_allclose(np.asarray(s2.master["w"]),
+                               np.asarray(p1["w"]), atol=0.05)
+    # and the bf16 params are the cast of the masters
+    np.testing.assert_allclose(
+        np.asarray(p2["w"], np.float32),
+        np.asarray(s2.master["w"].astype(jnp.bfloat16), np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), window=st.integers(2, 16))
+def test_wkv_state_decay_bounded(seed, window):
+    """RWKV state stays bounded when inputs are bounded and decay < 1."""
+    from repro.models.rwkv6 import _wkv_chunked
+    rng = np.random.default_rng(seed)
+    b, s, h, n = 1, 32, 2, 4
+    r = jnp.asarray(rng.uniform(-1, 1, (b, s, h, n)), jnp.float32)
+    k = jnp.asarray(rng.uniform(-1, 1, (b, s, h, n)), jnp.float32)
+    v = jnp.asarray(rng.uniform(-1, 1, (b, s, h, n)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.3, 0.9, (b, s, h, n)), jnp.float32)
+    u = jnp.asarray(rng.uniform(-1, 1, (h, n)), jnp.float32)
+    _, state = _wkv_chunked(r, k, v, w, u, jnp.zeros((b, h, n, n)), 8)
+    # geometric series bound: |S| <= max|kv| / (1 - max_decay)
+    assert float(jnp.max(jnp.abs(state))) <= 1.0 / (1.0 - 0.9) + 1e-3

@@ -1,0 +1,140 @@
+"""Regularizers: SPD coupling, Omega-update constraints, sigma' (Lemma 9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.regularizers import (Clustered, Graphical, MeanRegularized,
+                                     Probabilistic, sigma_prime, spd_inverse)
+
+REGS = [
+    MeanRegularized(lambda1=0.7, lambda2=0.3),
+    Clustered(lam=0.5, eta=0.4, k=2),
+    Probabilistic(lam=0.6, sigma2=2.0),
+    Graphical(lam=0.5, sigma2=1.0, lam2=0.02),
+]
+
+
+def _rand_W(m, d, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(0, 1, (m, d)),
+                       jnp.float32)
+
+
+@pytest.mark.parametrize("reg", REGS, ids=lambda r: r.name)
+def test_coupling_spd(reg):
+    m = 7
+    omega = reg.init_omega(m)
+    abar = reg.coupling(omega)
+    w = np.linalg.eigvalsh(np.asarray(abar))
+    assert np.all(w > 0), f"{reg.name}: coupling not SPD, eigs {w}"
+    np.testing.assert_allclose(np.asarray(abar), np.asarray(abar).T, atol=1e-5)
+
+
+@pytest.mark.parametrize("reg", REGS, ids=lambda r: r.name)
+def test_coupling_spd_after_update(reg):
+    m, d = 6, 10
+    omega = reg.init_omega(m)
+    W = _rand_W(m, d)
+    omega2 = reg.update_omega(W, omega)
+    abar = reg.coupling(omega2)
+    assert np.all(np.linalg.eigvalsh(np.asarray(abar)) > 0)
+
+
+def test_mean_regularized_omega_annihilates_constants():
+    """Omega = (I - 11^T/m)^2 has the all-ones vector in its null space."""
+    reg = MeanRegularized()
+    omega = reg.init_omega(5)
+    ones = jnp.ones(5)
+    np.testing.assert_allclose(np.asarray(omega @ ones), 0.0, atol=1e-6)
+
+
+def test_probabilistic_update_trace_one():
+    reg = Probabilistic()
+    W = _rand_W(5, 8, seed=3)
+    omega = reg.update_omega(W, reg.init_omega(5))
+    np.testing.assert_allclose(float(jnp.trace(omega)), 1.0, atol=1e-5)
+    assert np.all(np.linalg.eigvalsh(np.asarray(omega)) > -1e-6)
+
+
+def test_probabilistic_update_cold_start_stays_prior():
+    reg = Probabilistic()
+    omega = reg.update_omega(jnp.zeros((5, 8)), reg.init_omega(5))
+    np.testing.assert_allclose(np.asarray(omega), np.eye(5) / 5, atol=1e-5)
+
+
+def test_clustered_update_constraints():
+    """Omega in {0 <= Omega <= I, tr(Omega) = k}."""
+    reg = Clustered(lam=0.5, eta=0.3, k=3)
+    W = _rand_W(8, 12, seed=4)
+    omega = reg.update_omega(W, reg.init_omega(8))
+    eigs = np.linalg.eigvalsh(np.asarray(omega))
+    assert np.all(eigs >= -1e-5)
+    assert np.all(eigs <= 1.0 + 1e-5)
+    np.testing.assert_allclose(float(jnp.trace(omega)), 3.0, atol=1e-3)
+
+
+def test_clustered_update_optimal_among_feasible():
+    """Water-filled Omega beats random feasible Omegas on the objective."""
+    reg = Clustered(lam=1.0, eta=0.3, k=2)
+    m = 6
+    W = _rand_W(m, 9, seed=5)
+    omega_star = reg.update_omega(W, reg.init_omega(m))
+
+    def objective(om):
+        return float(jnp.einsum(
+            "td,ts,sd->", W, spd_inverse(reg.eta * jnp.eye(m) + om), W))
+
+    best = objective(omega_star)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        q, _ = np.linalg.qr(rng.normal(0, 1, (m, m)))
+        lam = rng.random(m)
+        lam = lam / lam.sum() * reg.k
+        lam = np.clip(lam, 0, 1)
+        om = jnp.asarray(q @ np.diag(lam) @ q.T, jnp.float32)
+        assert best <= objective(om) + 1e-3
+
+
+def test_graphical_update_psd_and_sparsifying():
+    W = _rand_W(6, 10, seed=6)
+    dense_reg = Graphical(lam=0.3, lam2=0.0, ista_steps=40, ista_lr=0.05)
+    sparse_reg = Graphical(lam=0.3, lam2=2.0, ista_steps=40, ista_lr=0.05)
+    om_dense = dense_reg.update_omega(W, dense_reg.init_omega(6))
+    om_sparse = sparse_reg.update_omega(W, sparse_reg.init_omega(6))
+    assert np.all(np.linalg.eigvalsh(np.asarray(om_sparse)) > 0)
+    offmask = ~np.eye(6, dtype=bool)
+    # the l1 prox must shrink off-diagonal structure vs the lam2=0 update
+    assert (np.abs(np.asarray(om_sparse))[offmask].mean()
+            < 0.5 * np.abs(np.asarray(om_dense))[offmask].mean())
+
+
+def test_sigma_prime_scalar_vs_per_task():
+    reg = MeanRegularized(0.5, 0.5)
+    K = reg.K(reg.init_omega(6))
+    s_scalar = sigma_prime(K)
+    s_task = sigma_prime(K, per_task=True)
+    assert s_task.shape == (6,)
+    np.testing.assert_allclose(float(s_scalar), float(jnp.max(s_task)),
+                               rtol=1e-6)
+    assert np.all(np.asarray(s_task) >= 1.0 - 1e-5)  # row-diag ratio >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.integers(2, 8))
+def test_sigma_prime_satisfies_inequality_28(seed, m):
+    """Property (Lemma 9): sigma' sum_t K_tt ||u_t||^2 >= sum_tt' K_tt' <u_t,u_t'>.
+
+    (The 1/2 factors of M cancel on both sides.)
+    """
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (m, m))
+    abar = a @ a.T + np.eye(m) * 0.1
+    K = np.asarray(spd_inverse(jnp.asarray(abar, jnp.float32)))
+    sp = float(sigma_prime(jnp.asarray(K)))
+    d = 5
+    u = rng.normal(0, 1, (m, d)).astype(np.float32)
+    lhs = sp * np.sum(np.diagonal(K) * np.sum(u * u, axis=1))
+    rhs = np.einsum("td,ts,sd->", u, K, u)
+    assert lhs >= rhs - 1e-3 * abs(rhs) - 1e-4

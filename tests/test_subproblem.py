@@ -1,0 +1,113 @@
+"""Local subproblem (eq. 4) and theta (Definition 1) semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MeanRegularized, get_loss, init_state, primal_weights,
+                        sigma_prime)
+from repro.core.subproblem import (local_sdca, measure_theta, solve_exact,
+                                   subproblem_value)
+from repro.data.synthetic import tiny_problem
+
+
+@pytest.fixture(scope="module")
+def setup():
+    train, _ = tiny_problem(m=4, n=24, d=6, seed=0)
+    reg = MeanRegularized(0.5, 0.5)
+    K = reg.K(reg.init_omega(train.m))
+    sig = sigma_prime(K)
+    q = sig * jnp.diagonal(K) / 2.0
+    state = init_state(train)
+    W = primal_weights(K, state.v)
+    return train, K, q, state, W
+
+
+def test_theta_zero_budget_is_one(setup):
+    train, K, q, state, W = setup
+    loss = get_loss("hinge")
+    key = jax.random.PRNGKey(0)
+    d_, _ = local_sdca(loss, train.X[0], train.y[0], train.mask[0],
+                       state.alpha[0], W[0], q[0], jnp.asarray(0), key, 50)
+    assert np.allclose(np.asarray(d_), 0.0)
+    th = measure_theta(loss, train.X[0], train.y[0], train.mask[0],
+                       state.alpha[0], W[0], q[0], d_, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(float(th), 1.0, atol=1e-6)
+
+
+def test_theta_decreases_with_budget(setup):
+    train, K, q, state, W = setup
+    loss = get_loss("hinge")
+    key = jax.random.PRNGKey(0)
+    thetas = []
+    for budget in [2, 10, 50, 400]:
+        d_, _ = local_sdca(loss, train.X[0], train.y[0], train.mask[0],
+                           state.alpha[0], W[0], q[0], jnp.asarray(budget),
+                           key, 400)
+        th = measure_theta(loss, train.X[0], train.y[0], train.mask[0],
+                           state.alpha[0], W[0], q[0], d_,
+                           jax.random.PRNGKey(1))
+        thetas.append(float(th))
+    assert all(b <= a + 1e-4 for a, b in zip(thetas, thetas[1:])), thetas
+    assert thetas[-1] < 0.05
+    assert all(0.0 - 1e-6 <= t <= 1.0 + 1e-6 for t in thetas)
+
+
+def test_u_equals_xt_dalpha(setup):
+    """The shipped Delta v_t must equal X_t^T Delta alpha_t exactly."""
+    train, K, q, state, W = setup
+    loss = get_loss("smooth_hinge")
+    d_, u = local_sdca(loss, train.X[1], train.y[1], train.mask[1],
+                       state.alpha[1], W[1], q[1], jnp.asarray(40),
+                       jax.random.PRNGKey(3), 40)
+    np.testing.assert_allclose(np.asarray(train.X[1].T @ (d_ * train.mask[1])),
+                               np.asarray(u), atol=1e-4)
+
+
+def test_subproblem_value_decreases(setup):
+    train, K, q, state, W = setup
+    loss = get_loss("hinge")
+    g0 = subproblem_value(loss, train.X[0], train.y[0], train.mask[0],
+                          state.alpha[0], jnp.zeros_like(state.alpha[0]),
+                          W[0], q[0])
+    d_, _ = local_sdca(loss, train.X[0], train.y[0], train.mask[0],
+                       state.alpha[0], W[0], q[0], jnp.asarray(100),
+                       jax.random.PRNGKey(0), 100)
+    g1 = subproblem_value(loss, train.X[0], train.y[0], train.mask[0],
+                          state.alpha[0], d_, W[0], q[0])
+    assert float(g1) < float(g0)
+
+
+def test_padding_never_touched(setup):
+    """Updates on padded coordinates must be identically zero."""
+    train, K, q, state, W = setup
+    # build a task with heavy padding
+    mask = train.mask[0].at[10:].set(0.0)
+    loss = get_loss("hinge")
+    d_, _ = local_sdca(loss, train.X[0], train.y[0], mask, state.alpha[0],
+                       W[0], q[0], jnp.asarray(200), jax.random.PRNGKey(0),
+                       200)
+    assert np.allclose(np.asarray(d_)[10:], 0.0)
+
+
+def test_exact_solver_reaches_stationarity(setup):
+    """After solve_exact, no single coordinate step can improve much."""
+    train, K, q, state, W = setup
+    loss = get_loss("smooth_hinge")
+    dstar, u = solve_exact(loss, train.X[2], train.y[2], train.mask[2],
+                           state.alpha[2], W[2], q[2], jax.random.PRNGKey(5),
+                           passes=64)
+    g_star = subproblem_value(loss, train.X[2], train.y[2], train.mask[2],
+                              state.alpha[2], dstar, W[2], q[2])
+    # try one extra exact coordinate step everywhere; improvement ~ 0
+    n = train.X[2].shape[0]
+    alpha_eff = state.alpha[2] + dstar
+    g_eff = W[2] + q[2] * u
+    for i in range(0, n, 5):
+        x = train.X[2][i]
+        delta = loss.sdca_delta(alpha_eff[i], train.y[2][i],
+                                jnp.dot(x, g_eff), q[2] * jnp.dot(x, x))
+        d2 = dstar.at[i].add(delta * train.mask[2][i])
+        g2 = subproblem_value(loss, train.X[2], train.y[2], train.mask[2],
+                              state.alpha[2], d2, W[2], q[2])
+        assert float(g_star) - float(g2) < 1e-3

@@ -1,0 +1,127 @@
+"""Training substrate: optimizer semantics, loss decrease, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.tokens import DataConfig, TokenStream
+from repro.models.transformer import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+from repro.train.optimizer import (AdamW, SGD, clip_by_global_norm,
+                                   cosine_schedule, global_norm)
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=None)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2.0 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = AdamW(lr=0.01, weight_decay=0.5, clip_norm=None)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    zero = {"w": jnp.zeros(4)}
+    for _ in range(50):
+        params, state = opt.update(zero, state, params)
+    assert float(params["w"][0]) < 1.0
+
+
+def test_sgd_momentum_moves():
+    opt = SGD(lr=0.1, momentum=0.9)
+    params = {"w": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(100):
+        params, state = opt.update({"w": params["w"]}, state, params)
+    assert abs(float(params["w"])) < 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full(4, 10.0), "b": jnp.full(9, 10.0)}
+    clipped = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    # below the threshold: unchanged
+    small = {"a": jnp.full(4, 0.01), "b": jnp.full(9, 0.01)}
+    same = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(small["a"]))
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1.0, warmup=10, total=100, min_frac=0.1)
+    lrs = [float(fn(jnp.asarray(s))) for s in [0, 5, 10, 50, 100, 200]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=1e-3)
+
+
+def test_train_loss_decreases_smollm_reduced():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    tc = TrainConfig(lr=1e-3)
+    params, opt_state = init_train_state(model, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    stream = TokenStream(cfg, DataConfig(seq_len=64, batch_size=8))
+    losses = []
+    for i, batch in enumerate(stream.batches(30)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses[:3]
+
+
+def test_train_step_moe_aux_losses_present():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    model = build_model(cfg)
+    tc = TrainConfig()
+    params, opt_state = init_train_state(model, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tc))
+    stream = TokenStream(cfg, DataConfig(seq_len=32, batch_size=4))
+    batch = {k: jnp.asarray(v)
+             for k, v in next(stream.batches(1)).items()}
+    _, _, metrics = step(params, opt_state, batch)
+    assert "moe_lb" in metrics and float(metrics["moe_lb"]) > 0.0
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.asarray([1, 2, 3], np.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, tree)
+        assert ckpt.latest_step(d) == 7
+        restored, step = ckpt.restore(d, tree)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["a"]), tree["a"])
+        np.testing.assert_array_equal(np.asarray(restored["b"]["c"]),
+                                      tree["b"]["c"])
+
+
+def test_checkpoint_latest_and_strictness():
+    tree = {"w": np.zeros((2, 2), np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, tree)
+        ckpt.save(d, 5, tree)
+        assert ckpt.latest_step(d) == 5
+        with pytest.raises(ValueError):
+            ckpt.restore(d, {"w": np.zeros((3, 3), np.float32)})
+
+
+def test_token_stream_deterministic_and_bounded():
+    cfg = get_config("gemma-2b").reduced()
+    a = list(TokenStream(cfg, DataConfig(seq_len=16, batch_size=2,
+                                         seed=3)).batches(2))
+    b = list(TokenStream(cfg, DataConfig(seq_len=16, batch_size=2,
+                                         seed=3)).batches(2))
+    np.testing.assert_array_equal(a[0]["tokens"], b[0]["tokens"])
+    assert a[0]["tokens"].max() < cfg.vocab_size
+    assert a[0]["tokens"].min() >= 0
