@@ -90,18 +90,32 @@ def time_to_epsilon(history: Dict[str, List[float]], p_star: float,
     return float("inf")
 
 
-def retime(primal: List[float], round_steps: List[float], d: int,
-           network_name: str, step_flops=None) -> Dict[str, List[float]]:
-    """Re-derive the simulated wall-clock for a recorded trajectory under a
-    different network (trajectories are network-independent)."""
-    net = systems_model.NETWORKS[network_name]
-    sf = step_flops or systems_model.SDCA_STEP_FLOPS
-    t, times = 0.0, []
-    for steps in round_steps:
-        t += (steps * sf(d) / systems_model.CLOCK_FLOPS
-              + systems_model.comm_time(net, 8.0 * d))
-        times.append(t)
-    return {"primal": primal, "time": times[:len(primal)]}
+def retime_trace(primal: List[float], round_steps, d: int, network: str,
+                 policy: str = "sync", clock_cycle_s: float = 0.0,
+                 step_flops=None, systems=None) -> Dict[str, List[float]]:
+    """Replay a recorded trajectory through a fresh event-driven SystemsTrace.
+
+    ``round_steps``: (rounds, m) per-node executed steps (``RunResult.
+    round_budgets``) or a per-round scalar list (treated as one synchronous
+    worker, the mini-batch case). Trajectories are network-independent, so
+    one recorded run can be timed under every network x policy combination.
+    Note the *statistics* of the trajectory are whatever the recorded run
+    used; ``semi_sync`` retiming is consistent when the recorded budgets
+    already fit the deadline (the MOCHA deadline variants below).
+    """
+    steps = np.asarray(round_steps)
+    if steps.ndim == 1:
+        steps = steps[:, None]
+    cfg = systems or systems_model.SystemsConfig(
+        network=network, policy=policy, clock_cycle_s=clock_cycle_s)
+    trace = systems_model.SystemsTrace(
+        steps.shape[1], d, cfg,
+        step_flops=step_flops or systems_model.SDCA_STEP_FLOPS)
+    for row in steps:
+        trace.advance(row)
+    times = trace.times()
+    # python floats: downstream comparisons stay JSON-serializable bools
+    return {"primal": primal, "time": [float(t) for t in times[:len(primal)]]}
 
 
 def simulate_cocoa_adaptive(train, reg, rounds: int, theta: float = 0.1,
@@ -243,34 +257,58 @@ def run_method_trajectories(train, reg, rounds: int, seed: int = 0,
             loss="hinge", rounds=rounds * 3,
             budget=BudgetConfig(passes=16.0), seed=seed, record_every=1),
             budget_fn=budget_fn)
-        trajs["mocha"].append((res.history["primal"],
-                               res.history["round_max_steps"],
-                               systems_model.SDCA_STEP_FLOPS))
+        # clock cycle consistent with this variant's deadline: budgets were
+        # drawn to fit cap steps, so semi_sync retiming never truncates
+        cycle_s = (cap * systems_model.SDCA_STEP_FLOPS(train.d)
+                   / systems_model.CLOCK_FLOPS)
+        trajs["mocha"].append({
+            "primal": res.history["primal"],
+            "steps": res.round_budgets,
+            "step_flops": systems_model.SDCA_STEP_FLOPS,
+            "clock_cycle_s": cycle_s})
 
     for theta in COCOA_THETAS:
         p, s = simulate_cocoa_adaptive(train, reg, rounds, theta=theta)
-        trajs["cocoa"].append((p, s, systems_model.SDCA_STEP_FLOPS))
+        trajs["cocoa"].append({
+            "primal": p, "steps": s,
+            "step_flops": systems_model.SDCA_STEP_FLOPS,
+            "clock_cycle_s": None})
 
     mb = MiniBatchConfig(loss="hinge", rounds=rounds * 3, batch=16, lr=0.05,
                          beta=8.0, seed=seed, record_every=1)
     sgd = run_mb_sgd(train, reg, mb)
     sdca = run_mb_sdca(train, reg, mb)
     batch_steps = [mb.batch] * (rounds * 3)
-    trajs["mb_sgd"].append((sgd.history["primal"], batch_steps,
-                            systems_model.SGD_STEP_FLOPS))
-    trajs["mb_sdca"].append((sdca.history["primal"], batch_steps,
-                             systems_model.SDCA_STEP_FLOPS))
+    trajs["mb_sgd"].append({
+        "primal": sgd.history["primal"], "steps": batch_steps,
+        "step_flops": systems_model.SGD_STEP_FLOPS, "clock_cycle_s": None})
+    trajs["mb_sdca"].append({
+        "primal": sdca.history["primal"], "steps": batch_steps,
+        "step_flops": systems_model.SDCA_STEP_FLOPS, "clock_cycle_s": None})
     return trajs
 
 
 def best_times_for_network(trajs: Dict, d: int, network: str, p_star: float,
-                           eps_rel: float) -> Dict[str, float]:
-    """Per method: best tuned configuration's time-to-epsilon."""
+                           eps_rel: float,
+                           policy: str = "sync") -> Dict[str, float]:
+    """Per method: best tuned configuration's time-to-epsilon, timed through
+    a fresh SystemsTrace per variant.
+
+    ``policy='semi_sync'`` applies MOCHA's clock cycle to the variants that
+    define one (``clock_cycle_s``); methods without a deadline semantics
+    (CoCoA fixed-theta, mini-batch) always pay the synchronous straggler --
+    that asymmetry IS the paper's Fig-1/2 comparison.
+    """
     out = {}
     for name, variants in trajs.items():
         best = float("inf")
-        for primal, steps, sf in variants:
-            hist = retime(primal, steps, d, network, sf)
+        for v in variants:
+            use_semi = policy == "semi_sync" and v["clock_cycle_s"] is not None
+            hist = retime_trace(
+                v["primal"], v["steps"], d, network,
+                policy="semi_sync" if use_semi else "sync",
+                clock_cycle_s=v["clock_cycle_s"] if use_semi else 0.0,
+                step_flops=v["step_flops"])
             best = min(best, time_to_epsilon(hist, p_star, eps_rel))
         out[name] = best
     return out

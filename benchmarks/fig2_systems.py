@@ -21,12 +21,13 @@ def run(quick: bool = True):
     for label, lo in (("high_var", 0.1), ("low_var", 0.9)):
         trajs, us = common.timed(common.run_method_trajectories, train, reg,
                                  rounds, systems_lo=lo)
-        times = common.best_times_for_network(trajs, train.d, "lte",
-                                              p_star, EPS)
-        row = {"bench": "fig2", "variability": label, "eps_rel": EPS,
-               "us_per_call": us}
-        row.update({f"t_{m}": t for m, t in times.items()})
-        row["mocha_fastest"] = times["mocha"] <= min(
-            times["cocoa"], times["mb_sgd"], times["mb_sdca"])
-        rows.append(row)
+        for policy in ("sync", "semi_sync"):
+            times = common.best_times_for_network(trajs, train.d, "lte",
+                                                  p_star, EPS, policy=policy)
+            row = {"bench": "fig2", "variability": label, "policy": policy,
+                   "eps_rel": EPS, "us_per_call": us}
+            row.update({f"t_{m}": t for m, t in times.items()})
+            row["mocha_fastest"] = times["mocha"] <= min(
+                times["cocoa"], times["mb_sgd"], times["mb_sdca"])
+            rows.append(row)
     return rows

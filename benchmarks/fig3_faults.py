@@ -24,12 +24,15 @@ def run(quick: bool = True):
             loss="hinge", rounds=rounds,
             budget=BudgetConfig(passes=1.0, drop_prob=p),
             record_every=rounds))
+        sim = res.trace.summary()
         rows.append({
             "bench": "fig3", "drop_prob": p, "us_per_call": us,
             "primal_gap_vs_ref": res.final("primal") - p_ref,
             "rel_gap": res.final("gap") / max(abs(res.final("primal")), 1.0),
             "converged": (res.final("gap")
                           / max(abs(res.final("primal")), 1.0)) < 0.05,
+            "mean_dropped_per_round": sim["mean_dropped"],
+            "sim_elapsed_s": sim["elapsed_s"],
         })
     # p == 1 on one node: must NOT converge to the reference solution
     with warnings.catch_warnings():

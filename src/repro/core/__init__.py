@@ -3,11 +3,16 @@ from repro.core.dual import (DualState, FederatedData, compute_v,
                              dual_objective, duality_gap, init_state,
                              per_task_error, primal_objective, primal_weights,
                              r_star)
+from repro.core.engine import (ENGINES, LocalEngine, PallasEngine,
+                               RoundEngine, ShardedEngine, get_engine)
 from repro.core.losses import (HINGE, LOGISTIC, LOSSES, SMOOTH_HINGE, SQUARED,
                                Loss, get_loss)
 from repro.core.minibatch import (MiniBatchConfig, MiniBatchResult, run_mb_sdca,
                                   run_mb_sgd)
-from repro.core.mocha import MochaConfig, RunResult, run_cocoa, run_mocha
+from repro.core.mocha import (HISTORY_KEYS, MochaConfig, RunResult, run_cocoa,
+                              run_mocha)
+from repro.core.systems_model import (NETWORKS, Network, RoundEvent,
+                                      SystemsConfig, SystemsTrace)
 from repro.core.regularizers import (REGULARIZERS, Clustered, Graphical,
                                      MeanRegularized, Probabilistic,
                                      Regularizer, sigma_prime, spd_inverse)

@@ -28,6 +28,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.utils.jax_compat import fp_barrier
+
 Array = jax.Array
 
 _EPS = 1e-12
@@ -76,7 +78,9 @@ def _hinge_conj_neg(a, y):
 
 def _hinge_delta(a, y, xg, qxx, eps):
     abar = a * y
-    step = (1.0 - y * xg) / jnp.maximum(qxx, eps)
+    # barrier: forbid FMA-contracting y*xg into the subtraction, which would
+    # break bit-parity with the Pallas hinge kernel (same expression there)
+    step = (1.0 - fp_barrier(y * xg)) / jnp.maximum(qxx, eps)
     abar_new = jnp.clip(abar + step, 0.0, 1.0)
     return (abar_new - abar) * y
 

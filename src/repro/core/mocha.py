@@ -6,9 +6,13 @@ Outer loop alternates:
     Delta v_t = X_t^T Delta alpha_t, server reduces and recomputes W(alpha);
   * a central Omega update (Appendix B.3), which needs only W, never the data.
 
-The per-round solver is jit-compiled once per (loss, max_steps); the Python
-loop orchestrates rounds, Omega refreshes, metric recording, and the simulated
-federated wall-clock (eq. 30).
+The round itself executes on a pluggable ``RoundEngine`` (vmapped jnp, the
+Pallas kernel, or the shard_map runtime -- see repro.core.engine and
+DESIGN.md); this single driver owns rounds, Omega refreshes, budget control,
+metric recording, and the event-driven simulated federated wall-clock
+(``SystemsTrace``, eq. 30).  Under the ``semi_sync`` clock-cycle policy the
+trace caps each node's per-round budget to what fits the deadline -- the
+paper's theta_t^h controller.
 """
 from __future__ import annotations
 
@@ -23,12 +27,16 @@ import numpy as np
 from repro.core import dual as dual_mod
 from repro.core import systems_model
 from repro.core.dual import DualState, FederatedData
-from repro.core.losses import Loss, get_loss
+from repro.core.engine import RoundEngine, get_engine
+from repro.core.losses import get_loss
 from repro.core.regularizers import Regularizer, sigma_prime
-from repro.core.subproblem import batched_local_sdca
+from repro.core.systems_model import SystemsConfig, SystemsTrace
 from repro.core.theta import BudgetConfig, round_budgets, validate_assumption2
 
 Array = jax.Array
+
+#: every engine emits exactly these history keys (tested for parity)
+HISTORY_KEYS = ("round", "dual", "primal", "gap", "time", "round_max_steps")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +47,9 @@ class MochaConfig:
     gamma: float = 1.0                 # aggregation parameter (Remark 3: 1 is best)
     per_task_sigma: bool = True        # Remark 5 per-task sigma'_t
     budget: BudgetConfig = dataclasses.field(default_factory=BudgetConfig)
+    engine: str = "local"              # round executor: local | pallas | sharded
     network: str = "lte"
+    systems: Optional[SystemsConfig] = None  # full systems model; overrides network
     seed: int = 0
     record_every: int = 1
 
@@ -50,26 +60,15 @@ class RunResult:
     omega: np.ndarray        # (m, m)
     state: DualState
     history: Dict[str, List[float]]
+    trace: Optional[SystemsTrace] = None      # full per-node event log
+    round_budgets: Optional[np.ndarray] = None  # (rounds, m) executed steps
 
     def final(self, key: str) -> float:
         return self.history[key][-1]
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _round(loss: Loss, max_steps: int, data: FederatedData, state: DualState,
-           K: Array, q_t: Array, budgets: Array, gamma: float, key: Array):
-    W = dual_mod.primal_weights(K, state.v)
-    keys = jax.random.split(key, data.m)
-    dalpha, u = batched_local_sdca(
-        loss, data.X, data.y, data.mask, state.alpha, W, q_t,
-        budgets, keys, max_steps)
-    return DualState(alpha=state.alpha + gamma * dalpha,
-                     v=state.v + gamma * u)
-
-
 @partial(jax.jit, static_argnums=(0,))
-def _metrics(loss: Loss, data: FederatedData, state: DualState,
-             abar: Array, K: Array):
+def _metrics(loss, data, state, abar, K):
     dual_val = dual_mod.dual_objective(data, loss, K, state.alpha, state.v)
     W = dual_mod.primal_weights(K, state.v)
     primal_val = dual_mod.primal_objective(data, loss, abar, W)
@@ -79,28 +78,36 @@ def _metrics(loss: Loss, data: FederatedData, state: DualState,
 def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
               omega0: Optional[Array] = None,
               budget_fn: Optional[Callable[[Array, Array, int], Array]] = None,
+              engine: Optional[RoundEngine] = None,
+              trace: Optional[SystemsTrace] = None,
               ) -> RunResult:
-    """Run Algorithm 1. ``budget_fn(key, n_t, round) -> (m,) int budgets``
-    overrides the BudgetConfig sampler (used by benchmark harnesses)."""
+    """Run Algorithm 1 on the configured round engine.
+
+    ``budget_fn(key, n_t, round) -> (m,) int budgets`` overrides the
+    BudgetConfig sampler (used by benchmark harnesses).  ``engine`` overrides
+    ``cfg.engine`` (accepts a name, class, or configured instance);
+    ``trace`` supplies a pre-built SystemsTrace (otherwise one is derived
+    from ``cfg.systems`` / ``cfg.network``).
+    """
     loss = get_loss(cfg.loss)
     validate_assumption2(cfg.budget)
+    eng = get_engine(engine if engine is not None else cfg.engine)
     m = data.m
-    n_t = np.asarray(data.n_t)
     omega = reg.init_omega(m) if omega0 is None else omega0
     abar = reg.coupling(omega)
     K = jnp.linalg.inv(abar)
     sig = sigma_prime(K, cfg.gamma, per_task=cfg.per_task_sigma)
     q_t = sig * jnp.diagonal(K) / 2.0 * jnp.ones((m,))
 
-    state = dual_mod.init_state(data)
     max_steps = cfg.budget.max_steps(data.n_max)
-    net = systems_model.NETWORKS[cfg.network]
+    state = eng.setup(data, loss, max_steps)
+    if trace is None:
+        sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
+        trace = SystemsTrace(m, data.d, sys_cfg)
     key = jax.random.PRNGKey(cfg.seed)
 
-    history: Dict[str, List[float]] = {
-        "round": [], "dual": [], "primal": [], "gap": [], "time": [],
-        "round_max_steps": []}
-    sim_time = 0.0
+    history: Dict[str, List[float]] = {k: [] for k in HISTORY_KEYS}
+    budgets_log: List[np.ndarray] = []
 
     for h in range(cfg.rounds):
         key, k_budget, k_round = jax.random.split(key, 3)
@@ -109,11 +116,14 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
         else:
             budgets = round_budgets(cfg.budget, k_budget, data.n_t)
         budgets = jnp.minimum(budgets, max_steps)
-        state = _round(loss, max_steps, data, state, K, q_t, budgets,
-                       cfg.gamma, k_round)
-        history["round_max_steps"].append(int(np.asarray(budgets).max()))
-        sim_time += systems_model.round_time_sync(
-            np.asarray(budgets), data.d, net)
+        cap = trace.begin_round()
+        if cap is not None:   # semi_sync: fit the work to the clock cycle
+            budgets = jnp.minimum(budgets, jnp.asarray(cap, budgets.dtype))
+        state = eng.round(state, K, q_t, budgets, cfg.gamma, k_round)
+        steps_np = np.asarray(budgets)
+        trace.commit(steps_np)
+        budgets_log.append(steps_np.astype(np.int64))
+        history["round_max_steps"].append(int(steps_np.max()))
 
         if cfg.omega_update_every and (h + 1) % cfg.omega_update_every == 0:
             W = dual_mod.primal_weights(K, state.v)
@@ -131,11 +141,12 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
             history["dual"].append(float(dual_val))
             history["primal"].append(float(primal_val))
             history["gap"].append(float(gap))
-            history["time"].append(sim_time)
+            history["time"].append(trace.elapsed_s)
 
     W = dual_mod.primal_weights(K, state.v)
     return RunResult(W=np.asarray(W), omega=np.asarray(omega), state=state,
-                     history=history)
+                     history=history, trace=trace,
+                     round_budgets=np.stack(budgets_log))
 
 
 def run_cocoa(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
@@ -147,5 +158,11 @@ def run_cocoa(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
     round then waits for the slowest node (paper Sec. 3.4).
     """
     fixed = BudgetConfig(passes=cfg.budget.passes)  # strip heterogeneity knobs
-    cocoa_cfg = dataclasses.replace(cfg, budget=fixed, per_task_sigma=False)
+    systems = cfg.systems
+    if systems is not None and systems.policy != "sync":
+        # CoCoA has no clock cycle: keep the hardware model, drop the deadline
+        systems = dataclasses.replace(systems, policy="sync",
+                                      clock_cycle_s=0.0)
+    cocoa_cfg = dataclasses.replace(cfg, budget=fixed, per_task_sigma=False,
+                                    systems=systems)
     return run_mocha(data, reg, cocoa_cfg, omega0=omega0)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.losses import Loss
+from repro.utils.jax_compat import fp_barrier
 
 Array = jax.Array
 
@@ -59,12 +60,18 @@ def local_sdca(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
         i = idx[s]
         x = X_t[i]
         a = alpha_t[i] + dalpha[i]
-        g_dot_x = jnp.dot(x, w_t) + q_t * jnp.dot(x, u)
+        # sum(x*w) not dot(x, w): the elementwise-mul+reduce lowering is
+        # bit-stable across execution contexts where dot_general is not, and
+        # fp_barrier pins product-into-add rounding that XLA would otherwise
+        # FMA-contract differently per fusion context -- together these keep
+        # the local and Pallas engines bit-identical
+        # (tests/test_runtime.py::test_engine_parity_bit_identical)
+        g_dot_x = jnp.sum(x * w_t) + fp_barrier(q_t * jnp.sum(x * u))
         qxx = q_t * xnorm2[i]
         delta = loss.sdca_delta(a, y_t[i], g_dot_x, qxx)
         live = ((s < budget_t) & (mask_t[i] > 0)).astype(delta.dtype)
         delta = delta * live
-        return dalpha.at[i].add(delta), u + delta * x
+        return dalpha.at[i].add(delta), u + fp_barrier(delta * x)
 
     dalpha0 = jnp.zeros(n, X_t.dtype)
     u0 = jnp.zeros(X_t.shape[1], X_t.dtype)

@@ -8,12 +8,24 @@ WiFi), matching the paper's simulation methodology.  The per-round time of a
 synchronous method is the max over participating nodes; MOCHA's global clock
 cycle instead *caps* the round and nodes fit their budget to it.
 
+Two layers:
+
+  * stateless helpers (``comm_time``, ``round_time_sync``,
+    ``round_time_clock_cycle``) -- the original scalar model, kept for
+    mini-batch baselines and back-compat;
+  * the event-driven per-node simulator (``SystemsConfig`` + ``SystemsTrace``)
+    that the unified MOCHA driver and the Fig-1/2/3 harnesses consume: each
+    node has its own clock rate, per-round straggler tails, and per-round
+    network draws, and the round-completion policy (``sync`` wait-for-all vs
+    ``semi_sync`` clock-cycle deadline) is a property of the trace, not of
+    call sites.
+
 All constants are explicit and documented so the benchmark is reproducible.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -75,3 +87,191 @@ def round_time_clock_cycle(step_counts: np.ndarray, d: int, network: Network,
     controller shrinks budgets instead of letting slow nodes run long.
     """
     return round_time_sync(step_counts, d, network, step_flops, clock_flops)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven per-node systems simulator
+# ---------------------------------------------------------------------------
+
+POLICIES = ("sync", "semi_sync")
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemsConfig:
+    """Static description of a federation's systems environment.
+
+    Defaults reproduce the original scalar model exactly: homogeneous
+    ``CLOCK_FLOPS`` nodes, no straggler tail, deterministic network, ``sync``
+    round policy.  Every knob maps to a paper concept:
+
+      * ``rate_lo``/``rate_hi``: per-*node* static clock-rate multipliers drawn
+        once, U[lo, hi] -- device heterogeneity (Sec. 3.3).
+      * ``straggler_prob``/``straggler_mult``: per-(node, round) tail event
+        slowing that node's round by ``mult`` -- transient stragglers
+        (background load, thermal throttling).
+      * ``comm_jitter``: per-(node, round) multiplicative latency jitter in
+        U[1, 1+jitter] -- network variance.
+      * ``policy='semi_sync'`` + ``clock_cycle_s``: MOCHA's global clock cycle;
+        the trace derives per-node *feasible* step caps each round and the
+        round costs the deadline, not the straggler (Sec. 3.4).
+    """
+
+    network: str = "lte"
+    policy: str = "sync"
+    clock_cycle_s: float = 0.0        # deadline; required > 0 for semi_sync
+    clock_flops: float = CLOCK_FLOPS
+    rate_lo: float = 1.0
+    rate_hi: float = 1.0
+    straggler_prob: float = 0.0
+    straggler_mult: float = 10.0
+    comm_jitter: float = 0.0
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy {self.policy!r} not in {POLICIES}")
+        if self.policy == "semi_sync" and self.clock_cycle_s <= 0.0:
+            raise ValueError("semi_sync policy requires clock_cycle_s > 0")
+        if not (0.0 < self.rate_lo <= self.rate_hi):
+            raise ValueError("need 0 < rate_lo <= rate_hi")
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """One federated round as seen by the simulated clock."""
+
+    round: int
+    steps: np.ndarray        # (m,) coordinate steps actually performed
+    compute_s: np.ndarray    # (m,) per-node compute time (0 for dropped)
+    comm_s: np.ndarray       # (m,) per-node round-trip message time
+    finish_s: np.ndarray     # (m,) offset within the round when node finished
+    start_s: float           # global clock when the round began
+    duration_s: float        # what the global clock advanced
+    cap_steps: Optional[np.ndarray]  # semi_sync: feasible steps under deadline
+    dropped: np.ndarray      # (m,) bool, steps == 0
+
+
+class SystemsTrace:
+    """Event-driven wall-clock simulator for one federated run.
+
+    Protocol (two-phase so the *controller* can react to this round's systems
+    state before committing work, exactly the paper's theta_t^h story):
+
+        cap = trace.begin_round()        # draw rates/network; semi_sync cap
+        budgets = min(budgets, cap)      # controller fits work to the cycle
+        ...run the round...
+        trace.commit(step_counts)        # advance the clock, log the event
+
+    ``advance(steps)`` is the one-shot begin+commit helper for sync call
+    sites.  ``elapsed_s`` is the global simulated clock; ``events`` the full
+    per-node log Fig-1/2/3 consume.
+    """
+
+    def __init__(self, m: int, d: int,
+                 cfg: SystemsConfig = SystemsConfig(),
+                 step_flops=SDCA_STEP_FLOPS,
+                 msg_bytes: Optional[float] = None):
+        cfg.validate()
+        self.m, self.d, self.cfg = m, d, cfg
+        self.network = NETWORKS[cfg.network]
+        self._rng = np.random.default_rng(cfg.seed)
+        # static per-node clock rates (device heterogeneity)
+        self.rates = cfg.clock_flops * self._rng.uniform(
+            cfg.rate_lo, cfg.rate_hi, m)
+        self.step_flops_d = float(step_flops(d))
+        self.msg_bytes = 8.0 * d if msg_bytes is None else float(msg_bytes)
+        self.elapsed_s = 0.0
+        self.node_busy_s = np.zeros(m)
+        self.events: List[RoundEvent] = []
+        self._round_rates: Optional[np.ndarray] = None
+        self._round_comm: Optional[np.ndarray] = None
+        self._cap: Optional[np.ndarray] = None
+
+    # -- per-round protocol -------------------------------------------------
+
+    def begin_round(self) -> Optional[np.ndarray]:
+        """Draw this round's systems state.
+
+        Returns per-node feasible step caps under the clock-cycle deadline
+        (``semi_sync``) or None (``sync``: no cap, the server waits).
+        """
+        if self._round_rates is not None:
+            raise RuntimeError("begin_round called twice without commit")
+        cfg = self.cfg
+        slow = self._rng.random(self.m) < cfg.straggler_prob
+        self._round_rates = self.rates / np.where(slow, cfg.straggler_mult,
+                                                  1.0)
+        lat = self.network.latency_s * (
+            1.0 + cfg.comm_jitter * self._rng.random(self.m))
+        self._round_comm = lat + self.msg_bytes / self.network.bandwidth_Bps
+        if cfg.policy == "semi_sync":
+            self._cap = np.floor(
+                cfg.clock_cycle_s * self._round_rates / self.step_flops_d
+            ).astype(np.int64)
+            return self._cap
+        self._cap = None
+        return None
+
+    def commit(self, step_counts: np.ndarray) -> float:
+        """Advance the clock by one round of ``step_counts`` local steps."""
+        if self._round_rates is None:
+            self.begin_round()
+        steps = np.asarray(step_counts, dtype=np.float64)
+        if steps.shape != (self.m,):
+            raise ValueError(f"step_counts shape {steps.shape} != ({self.m},)")
+        if self._cap is not None:
+            # the deadline is physical: a node stops computing when the clock
+            # cycle ends, whatever budget the caller asked for (keeps the
+            # clock honest and utilization <= 1 for un-capped callers)
+            steps = np.minimum(steps, self._cap)
+        compute = steps * self.step_flops_d / self._round_rates
+        comm = self._round_comm
+        # a dropped node (0 steps) costs no compute but still one message slot
+        # (the server's round bookkeeping pings every node)
+        finish = compute + comm
+        if self.cfg.policy == "semi_sync":
+            # the deadline bounds compute; nodes were budget-capped to fit it
+            duration = self.cfg.clock_cycle_s + float(np.max(comm))
+        else:
+            duration = float(np.max(finish))
+        self.events.append(RoundEvent(
+            round=len(self.events), steps=steps.astype(np.int64),
+            compute_s=compute, comm_s=comm.copy(), finish_s=finish,
+            start_s=self.elapsed_s, duration_s=duration,
+            cap_steps=None if self._cap is None else self._cap.copy(),
+            dropped=steps == 0))
+        self.elapsed_s += duration
+        self.node_busy_s += compute
+        self._round_rates = self._round_comm = self._cap = None
+        return duration
+
+    def advance(self, step_counts: np.ndarray) -> float:
+        """One-shot begin_round + commit (sync call sites)."""
+        if self._round_rates is None:
+            self.begin_round()
+        return self.commit(step_counts)
+
+    # -- analysis -----------------------------------------------------------
+
+    def utilization(self) -> np.ndarray:
+        """Fraction of the elapsed clock each node spent computing."""
+        return self.node_busy_s / max(self.elapsed_s, 1e-12)
+
+    def times(self) -> np.ndarray:
+        """Cumulative clock at the END of each committed round."""
+        return np.cumsum([e.duration_s for e in self.events])
+
+    def summary(self) -> Dict[str, float]:
+        if not self.events:
+            return {"rounds": 0, "elapsed_s": 0.0}
+        durs = np.asarray([e.duration_s for e in self.events])
+        drops = np.asarray([e.dropped.sum() for e in self.events])
+        return {
+            "rounds": len(self.events),
+            "elapsed_s": float(self.elapsed_s),
+            "mean_round_s": float(durs.mean()),
+            "p95_round_s": float(np.percentile(durs, 95)),
+            "mean_dropped": float(drops.mean()),
+            "min_utilization": float(self.utilization().min()),
+            "max_utilization": float(self.utilization().max()),
+        }

@@ -17,6 +17,7 @@ the same budgets and keys (tested in tests/test_runtime.py).
 """
 from __future__ import annotations
 
+import inspect
 from functools import partial
 from typing import Tuple
 
@@ -24,7 +25,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level export, replication check spelled check_vma
+    from jax import shard_map as _shard_map
+except ImportError:  # pinned 0.4.x: experimental module, check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
 
 from repro.core.dual import DualState, FederatedData
 from repro.core.losses import Loss
@@ -33,12 +41,21 @@ from repro.core.subproblem import batched_local_sdca
 Array = jax.Array
 
 
+def shard_map_compat(fn, mesh, in_specs, out_specs, check: bool = True):
+    """``shard_map`` across the jax 0.4.x -> 0.6+ API rename."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
+
+
 def make_federated_mesh(n_shards: int | None = None) -> Mesh:
     """1-D mesh over the ``data`` axis for the MTL runtime."""
     devices = jax.devices()
     n = n_shards or len(devices)
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    try:  # newer jax: explicit Auto axis type
+        return jax.make_mesh((n,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    except (AttributeError, TypeError):
+        return jax.make_mesh((n,), ("data",))
 
 
 def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
@@ -73,7 +90,7 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
         du_full = du_full.astype(v_full.dtype)
         return alpha_sh + gamma * dalpha, v_full + gamma * du_full
 
-    fn = shard_map(
+    fn = shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(task_sharded, task_sharded, task_sharded, task_sharded,
                   replicated, task_sharded, task_sharded, task_sharded,
@@ -81,7 +98,7 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
         out_specs=(task_sharded, replicated),
         # the solver builds zero-initialized carries internally; their varying
         # manual axes are established by the first masked update
-        check_vma=False,
+        check=False,
     )
     return fn(data.X, data.y, data.mask, alpha, v, K, q_t, budgets, keys)
 

@@ -1,96 +1,27 @@
-"""Distributed MOCHA driver: the single-process Algorithm-1 loop running its
-W-rounds through the shard_map runtime (tasks sharded over the mesh).
+"""Distributed MOCHA driver: back-compat entry point.
 
-Produces the same history schema as ``repro.core.mocha.run_mocha`` so the
-benchmark harnesses can use either engine interchangeably.
+The Algorithm-1 loop now lives in ONE place -- ``repro.core.mocha.run_mocha``
+-- parameterized by a ``RoundEngine``; the shard_map runtime is its
+``ShardedEngine`` backend.  This wrapper keeps the historical call signature
+and, because the unified driver owns the history schema, emits exactly the
+same keys as every other engine (including ``round_max_steps``, which the old
+fork silently dropped).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import dual as dual_mod
-from repro.core import systems_model
 from repro.core.dual import FederatedData
-from repro.core.losses import get_loss
-from repro.core.mocha import MochaConfig, RunResult
-from repro.core.regularizers import Regularizer, sigma_prime
-from repro.core.theta import round_budgets, validate_assumption2
-from repro.federated import sharding as task_sharding
-from repro.federated.runtime import distributed_round, make_federated_mesh
-
-Array = jax.Array
+from repro.core.engine import ShardedEngine
+from repro.core.mocha import MochaConfig, RunResult, run_mocha
+from repro.core.regularizers import Regularizer
 
 
 def run_mocha_distributed(data: FederatedData, reg: Regularizer,
                           cfg: MochaConfig, mesh: Optional[Mesh] = None,
-                          ) -> RunResult:
-    loss = get_loss(cfg.loss)
-    validate_assumption2(cfg.budget)
-    mesh = mesh or make_federated_mesh()
-    shards = mesh.devices.size
-    m_real = data.m
-
-    data_p, _ = task_sharding.pad_tasks(data, shards)
-    m = data_p.m
-    omega = reg.init_omega(m_real)
-    abar = reg.coupling(omega)
-    K_real = jnp.linalg.inv(abar)
-    K = task_sharding.pad_task_matrix(K_real, m)
-    sig = sigma_prime(K_real, cfg.gamma, per_task=cfg.per_task_sigma)
-    q_real = sig * jnp.diagonal(K_real) / 2.0 * jnp.ones((m_real,))
-    q_t = task_sharding.pad_vector(q_real, m, fill=1.0)
-
-    alpha = jnp.zeros((m, data_p.n_max))
-    v = jnp.zeros((m, data_p.d))
-    max_steps = cfg.budget.max_steps(data_p.n_max)
-    net = systems_model.NETWORKS[cfg.network]
-    key = jax.random.PRNGKey(cfg.seed)
-
-    history: Dict[str, List[float]] = {
-        "round": [], "dual": [], "primal": [], "gap": [], "time": []}
-    sim_time = 0.0
-
-    for h in range(cfg.rounds):
-        key, k_budget, k_round = jax.random.split(key, 3)
-        budgets_real = round_budgets(cfg.budget, k_budget, data.n_t)
-        budgets = task_sharding.pad_vector(
-            jnp.minimum(budgets_real, max_steps).astype(jnp.int32), m)
-        keys = jax.random.split(k_round, m)
-        alpha, v = distributed_round(mesh, loss, max_steps, data_p, alpha, v,
-                                     K, q_t, budgets, cfg.gamma, keys)
-        sim_time += systems_model.round_time_sync(
-            np.asarray(budgets_real), data.d, net)
-
-        if cfg.omega_update_every and (h + 1) % cfg.omega_update_every == 0:
-            W_real = dual_mod.primal_weights(K_real, v[:m_real])
-            omega = reg.update_omega(W_real, omega)
-            abar = reg.coupling(omega)
-            K_real = jnp.linalg.inv(abar)
-            K = task_sharding.pad_task_matrix(K_real, m)
-            sig = sigma_prime(K_real, cfg.gamma, per_task=cfg.per_task_sigma)
-            q_real = sig * jnp.diagonal(K_real) / 2.0 * jnp.ones((m_real,))
-            q_t = task_sharding.pad_vector(q_real, m, fill=1.0)
-
-        if h % cfg.record_every == 0 or h == cfg.rounds - 1:
-            a_real, v_real = alpha[:m_real], v[:m_real]
-            dual_val = dual_mod.dual_objective(data, loss, K_real, a_real,
-                                               v_real)
-            W = dual_mod.primal_weights(K_real, v_real)
-            primal_val = dual_mod.primal_objective(data, loss, abar, W)
-            history["round"].append(h)
-            history["dual"].append(float(dual_val))
-            history["primal"].append(float(primal_val))
-            history["gap"].append(float(primal_val + dual_val))
-            history["time"].append(sim_time)
-
-    W = dual_mod.primal_weights(K_real, v[:m_real])
-    from repro.core.dual import DualState
-    return RunResult(W=np.asarray(W), omega=np.asarray(omega),
-                     state=DualState(alpha=alpha[:m_real], v=v[:m_real]),
-                     history=history)
+                          comm_dtype=None) -> RunResult:
+    """``run_mocha`` on the shard_map runtime (tasks sharded over the mesh)."""
+    return run_mocha(data, reg, cfg,
+                     engine=ShardedEngine(mesh=mesh, comm_dtype=comm_dtype))

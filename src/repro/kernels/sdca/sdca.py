@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils.jax_compat import fp_barrier
+
 
 def _sdca_kernel(x_ref, y_ref, mask_ref, alpha_ref, w_ref, xnorm_ref,
                  idx_ref, qb_ref, dalpha_ref, u_ref, *, max_steps: int):
@@ -42,16 +44,21 @@ def _sdca_kernel(x_ref, y_ref, mask_ref, alpha_ref, w_ref, xnorm_ref,
         x_i = pl.load(x_ref, (i, slice(None)))          # (d,)
         y_i = y_ref[i]
         a = alpha_ref[i] + dalpha_ref[i]
-        g_dot_x = jnp.sum(x_i * (w_ref[...] + q * u_ref[...]))
+        # sum(x*w) + fp_barrier around products-into-adds: matches the jnp
+        # reference solver op-for-op (bit-stable reduction lowering, no
+        # context-dependent FMA contraction), so local/pallas engine runs
+        # are bit-identical (test_runtime)
+        g_dot_x = jnp.sum(x_i * w_ref[...]) + fp_barrier(
+            q * jnp.sum(x_i * u_ref[...]))
         qxx = q * xnorm_ref[i]
         # hinge closed form: abar_new = clip(abar + (1 - y<x,g>)/qxx, 0, 1)
         abar = a * y_i
-        step = (1.0 - y_i * g_dot_x) / jnp.maximum(qxx, 1e-12)
+        step = (1.0 - fp_barrier(y_i * g_dot_x)) / jnp.maximum(qxx, 1e-12)
         abar_new = jnp.clip(abar + step, 0.0, 1.0)
         live = ((s < budget) & (mask_ref[i] > 0.0)).astype(jnp.float32)
         delta = (abar_new - abar) * y_i * live
         dalpha_ref[i] = dalpha_ref[i] + delta
-        u_ref[...] = u_ref[...] + delta * x_i
+        u_ref[...] = u_ref[...] + fp_barrier(delta * x_i)
         return 0
 
     jax.lax.fori_loop(0, max_steps, body, 0)

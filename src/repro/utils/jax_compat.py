@@ -1,0 +1,39 @@
+"""Small compatibility shims over the pinned JAX version.
+
+``fp_barrier``: ``lax.optimization_barrier`` as a vmap-safe scalar/array
+identity.  The barrier pins floating-point rounding at op boundaries -- XLA
+may otherwise contract a product feeding an add into an FMA, and it decides
+per fusion context, so the same formula compiled inside a vmapped solver and
+inside a Pallas(interpret) kernel can differ by 1 ulp per step.  The SDCA
+engines barrier every product-into-add so all round engines are bit-identical
+(tests/test_runtime.py).
+
+Pinned JAX (0.4.x) ships the primitive without a batching rule (added
+upstream later); registering the trivial pass-through rule here is
+forward-compatible -- on newer JAX the registration is a no-op overwrite of
+an identical rule.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _register_optbar_batching() -> None:
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax.lax import optimization_barrier_p
+    except ImportError:  # future jax moved internals; assume rule exists
+        return
+
+    def _batcher(args, dims):
+        return optimization_barrier_p.bind(*args), dims
+
+    batching.primitive_batchers.setdefault(optimization_barrier_p, _batcher)
+
+
+_register_optbar_batching()
+
+
+def fp_barrier(x: jax.Array) -> jax.Array:
+    """Identity that forces ``x`` to round before downstream fusion."""
+    return jax.lax.optimization_barrier(x)

@@ -1,10 +1,12 @@
-"""Distributed (shard_map) MOCHA runtime == single-process driver."""
+"""Round-engine parity: local / pallas / sharded backends of the ONE driver
+produce bit-identical results, plus the shard_map runtime's own invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BudgetConfig, MeanRegularized, MochaConfig, get_loss,
+from repro.core import (HISTORY_KEYS, BudgetConfig, MeanRegularized,
+                        MochaConfig, PallasEngine, get_engine, get_loss,
                         run_mocha, sigma_prime)
 from repro.data.synthetic import tiny_problem
 from repro.federated.runtime import distributed_round, make_federated_mesh
@@ -12,6 +14,77 @@ from repro.federated.sharding import pad_task_matrix, pad_tasks, pad_vector
 from repro.federated.simulator import run_mocha_distributed
 
 REG = MeanRegularized(0.5, 0.5)
+
+ENGINES = ("local", "pallas", "sharded")
+
+
+@pytest.fixture(scope="module")
+def engine_runs():
+    """One heterogeneous run (stragglers + drops) per engine, same seed."""
+    train, _ = tiny_problem(m=5, n=24, d=6, seed=2)
+    cfg = MochaConfig(
+        loss="hinge", rounds=12,
+        budget=BudgetConfig(passes=1.0, systems_lo=0.5, drop_prob=0.3),
+        record_every=4, seed=3)
+    return {e: run_mocha(train, REG, cfg, engine=e) for e in ENGINES}
+
+
+@pytest.mark.parametrize("other", ["pallas", "sharded"])
+def test_engine_parity_bit_identical(engine_runs, other):
+    """Same seed/budgets => bit-identical (alpha, v), W, and history."""
+    a, b = engine_runs["local"], engine_runs[other]
+    np.testing.assert_array_equal(np.asarray(a.state.alpha),
+                                  np.asarray(b.state.alpha))
+    np.testing.assert_array_equal(np.asarray(a.state.v),
+                                  np.asarray(b.state.v))
+    np.testing.assert_array_equal(a.W, b.W)
+    assert a.history == b.history
+    np.testing.assert_array_equal(a.round_budgets, b.round_budgets)
+
+
+def test_engine_history_schema_parity(engine_runs):
+    """One schema across every engine (the old distributed driver dropped
+    round_max_steps); lengths consistent with the record cadence."""
+    for e in ENGINES:
+        h = engine_runs[e].history
+        assert set(h) == set(HISTORY_KEYS)
+        assert len(h["round_max_steps"]) == 12      # one per round
+        assert len(h["time"]) == len(h["primal"])   # one per record point
+
+
+def test_engine_parity_dropped_node_through_pallas():
+    """budget = 0 (the paper's dropped node) must be a no-op through the
+    Pallas kernel exactly as through the reference solver."""
+    train, _ = tiny_problem(m=4, n=16, d=5, seed=7)
+    cfg = MochaConfig(loss="hinge", rounds=6, record_every=5, seed=1)
+
+    def budget_fn(key, n_t, h):
+        return jnp.full((4,), 10, jnp.int32).at[2].set(0)
+
+    res = {e: run_mocha(train, REG, cfg, engine=e, budget_fn=budget_fn)
+           for e in ENGINES}
+    for e in ("pallas", "sharded"):
+        np.testing.assert_array_equal(np.asarray(res["local"].state.v),
+                                      np.asarray(res[e].state.v))
+    # node 2 never ran a step: its dual block must be exactly zero
+    assert float(jnp.abs(res["pallas"].state.alpha[2]).max()) == 0.0
+    assert float(jnp.abs(res["pallas"].state.v[2]).max()) == 0.0
+
+
+def test_pallas_engine_rejects_non_hinge():
+    train, _ = tiny_problem(m=3, n=12, d=4, seed=0)
+    cfg = MochaConfig(loss="logistic", rounds=2, engine="pallas")
+    with pytest.raises(ValueError, match="hinge"):
+        run_mocha(train, REG, cfg)
+
+
+def test_get_engine_resolution():
+    assert get_engine().name == "local"
+    assert get_engine("sharded").name == "sharded"
+    eng = PallasEngine(interpret=True)
+    assert get_engine(eng) is eng
+    with pytest.raises(KeyError):
+        get_engine("warp")
 
 
 def test_pad_tasks_roundtrip():
