@@ -1,14 +1,30 @@
 """Benchmark orchestrator: one module per paper table/figure + the roofline
 report.  Prints ``name,us_per_call,derived`` CSV rows (plus per-benchmark
-detail columns).
+detail columns) and writes a machine-readable ``BENCH_<name>.json`` next to
+the CSV stream for each suite, so the perf trajectory (e.g. the Table-1
+sweep-vs-sequential wall-clock) is tracked across PRs.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig1 ...]
+        [--json-dir DIR]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import pathlib
 import sys
+import time
+
+# Expose every CPU core as an XLA host device BEFORE jax initializes: the
+# sweep harness (core/sweep.py) shards independent grid cells across devices,
+# which is where the batched Table-1/4 path gets its multi-core wall-clock
+# win (the sequential baseline is inherently serial).  No-op off-CPU.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} "
+        f"--xla_force_host_platform_device_count={os.cpu_count()}").strip()
 
 
 def _fmt(v):
@@ -17,13 +33,37 @@ def _fmt(v):
     return str(v)
 
 
+def _json_safe(obj):
+    """Strict-JSON sanitizer: inf/nan floats become strings (json.dump would
+    emit bare ``Infinity`` tokens that strict parsers reject)."""
+    if isinstance(obj, float):
+        import math
+        return obj if math.isfinite(obj) else repr(obj)
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    return obj
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale protocol (slower)")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<name>.json files")
     args = ap.parse_args()
     quick = not args.full
+    json_dir = pathlib.Path(args.json_dir)
+    json_dir.mkdir(parents=True, exist_ok=True)
+
+    # persistent XLA compilation cache: repeat benchmark invocations skip the
+    # sweep programs' compile entirely (the cache survives the process)
+    import jax
+    jax.config.update("jax_compilation_cache_dir",
+                      str(json_dir / ".jax_cache"))
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
 
     from benchmarks import (convergence, fig1_stragglers, fig2_systems,
                             fig3_faults, roofline_report, table1_mtl,
@@ -37,13 +77,22 @@ def main() -> None:
         suites = {k: v for k, v in suites.items() if k in args.only}
 
     all_rows = []
+    failed = []
     print("name,us_per_call,derived")
     for name, mod in suites.items():
+        t0 = time.perf_counter()
         try:
             rows = mod.run(quick=quick)
         except Exception as e:  # noqa: BLE001
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            failed.append(name)
             continue
+        wall_s = time.perf_counter() - t0
+        out_path = json_dir / f"BENCH_{name}.json"
+        with out_path.open("w") as fh:
+            json.dump(_json_safe({"bench": name, "quick": quick,
+                                  "wall_s": wall_s, "rows": rows}),
+                      fh, indent=2, default=str)
         for row in rows:
             us = row.get("us_per_call", 0.0)
             derived = {k: v for k, v in row.items()
@@ -59,6 +108,9 @@ def main() -> None:
     if claims and len(bad) > len(claims) // 2:
         print(f"CLAIM-CHECK: MTL failed to win on {len(bad)}/{len(claims)} "
               "datasets", file=sys.stderr)
+    if failed:
+        print(f"FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

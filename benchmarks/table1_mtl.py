@@ -1,5 +1,17 @@
 """Table 1: average prediction error of global / local / MTL models on the
-three (synthetic-calibrated) federated datasets."""
+three (synthetic-calibrated) federated datasets.
+
+Quick mode runs a reduced protocol AND times the vmapped sweep harness
+against the pre-sweep sequential path (the ``speedup`` rows feed
+BENCH_table1.json's perf trajectory).  Both a cold (first-call, includes any
+XLA compiles not already in the persistent cache) and a steady-state
+(second-call) sweep wall-clock are recorded: the quick workload is small
+enough that one-time compilation dominates the cold number, while the
+steady-state number is what the tuning workload actually pays per sweep --
+see EXPERIMENTS.md.  ``--full`` restores the paper's protocol -- 10
+shuffles, the wide lambda grid -- which only the sweep harness makes
+affordable, so no sequential baseline is timed there.
+"""
 from __future__ import annotations
 
 from benchmarks import common
@@ -8,15 +20,16 @@ from benchmarks import common
 def run(quick: bool = True):
     rows = []
     rounds = 40 if quick else 80
-    shuffles = 2 if quick else common.SHUFFLES
+    shuffles = 2 if quick else common.SHUFFLES_FULL
+    lambdas = common.LAMBDAS if quick else common.LAMBDAS_FULL
     for spec in common.dataset_specs(skewed=False):
-        res, us = common.timed(common.model_comparison, spec, rounds,
-                               shuffles)
+        res, cold_us = common.timed(common.model_comparison, spec, rounds,
+                                    shuffles, lambdas)
         for kind in ("global", "local", "mtl"):
             rows.append({
                 "bench": "table1", "dataset": spec.name, "model": kind,
                 "err_mean": res[kind]["mean"], "err_stderr":
-                res[kind]["stderr"], "us_per_call": us,
+                res[kind]["stderr"], "us_per_call": cold_us,
             })
         # the paper's ordering: MTL < local and MTL < global
         rows.append({
@@ -24,4 +37,19 @@ def run(quick: bool = True):
             "mtl_beats_local": res["mtl"]["mean"] <= res["local"]["mean"],
             "mtl_beats_global": res["mtl"]["mean"] <= res["global"]["mean"],
         })
+        if quick:
+            _, warm_us = common.timed(common.model_comparison, spec, rounds,
+                                      shuffles, lambdas)
+            seq_res, seq_us = common.timed(
+                common.model_comparison_sequential, spec, rounds, shuffles,
+                lambdas)
+            rows.append({
+                "bench": "table1", "dataset": spec.name, "model": "speedup",
+                "sweep_wall_us": warm_us, "sweep_cold_wall_us": cold_us,
+                "sequential_wall_us": seq_us,
+                "speedup": seq_us / max(warm_us, 1e-9),
+                "speedup_cold": seq_us / max(cold_us, 1e-9),
+                "mtl_err_drift": abs(res["mtl"]["mean"]
+                                     - seq_res["mtl"]["mean"]),
+            })
     return rows

@@ -1,5 +1,6 @@
 """Table 4: the same comparison on highly skewed (two-orders-of-magnitude
-n_t) federations."""
+n_t) federations.  Runs through the vmapped sweep harness; ``--full``
+restores the paper's protocol (10 shuffles, wide lambda grid)."""
 from __future__ import annotations
 
 from benchmarks import common
@@ -8,10 +9,11 @@ from benchmarks import common
 def run(quick: bool = True):
     rows = []
     rounds = 40 if quick else 80
-    shuffles = 2 if quick else common.SHUFFLES
+    shuffles = 2 if quick else common.SHUFFLES_FULL
+    lambdas = common.LAMBDAS if quick else common.LAMBDAS_FULL
     for spec in common.dataset_specs(skewed=True):
         res, us = common.timed(common.model_comparison, spec, rounds,
-                               shuffles)
+                               shuffles, lambdas)
         for kind in ("global", "local", "mtl"):
             rows.append({
                 "bench": "table4", "dataset": spec.name, "model": kind,

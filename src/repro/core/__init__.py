@@ -19,4 +19,7 @@ from repro.core.regularizers import (REGULARIZERS, Clustered, Graphical,
 from repro.core.subproblem import (batched_local_sdca, local_sdca,
                                    measure_theta, solve_exact,
                                    subproblem_value)
-from repro.core.theta import BudgetConfig, round_budgets, validate_assumption2
+from repro.core.sweep import (SweepResult, run_sweep, stack_federations,
+                              sweep_errors)
+from repro.core.theta import (BudgetConfig, presample_budgets, round_budgets,
+                              round_key_schedule, validate_assumption2)

@@ -47,7 +47,9 @@ class FederatedData(NamedTuple):
 
     @property
     def n_t(self) -> Array:
-        return jnp.sum(self.mask, axis=1)
+        # axis=-1 so the property is also correct on batch-stacked data
+        # (core/sweep.py stacks shuffles along a leading axis)
+        return jnp.sum(self.mask, axis=-1)
 
     @property
     def n_total(self) -> Array:

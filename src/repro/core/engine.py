@@ -48,6 +48,23 @@ class RoundEngine(abc.ABC):
     """Executes one federated W-update round for the MOCHA driver."""
 
     name: str = "abstract"
+    #: capability flag: True iff the driver may run this engine's rounds
+    #: inside its device-resident ``lax.scan`` path (requires a pure,
+    #: trace-compatible ``round`` exposed via ``scan_round_fn``).  Engines
+    #: with host-side state (the sharded pad caches) or external kernels
+    #: keep the loop path.
+    supports_scan: bool = False
+
+    def scan_round_fn(self):
+        """Pure round function for the scanned driver, called as
+        ``fn(loss, max_steps, data, state, K, q_t, budgets, gamma, key)``.
+
+        Must be a stable module-level callable (it is a static jit argument)
+        whose results are bit-identical to ``round``.  Only meaningful when
+        ``supports_scan`` is True.
+        """
+        raise NotImplementedError(
+            f"engine {self.name!r} does not support the scanned driver")
 
     @abc.abstractmethod
     def setup(self, data: FederatedData, loss: Loss,
@@ -77,6 +94,7 @@ class LocalEngine(RoundEngine):
     """Single-process vmapped SDCA: the reference execution path."""
 
     name = "local"
+    supports_scan = True
 
     def setup(self, data: FederatedData, loss: Loss,
               max_steps: int) -> DualState:
@@ -86,6 +104,9 @@ class LocalEngine(RoundEngine):
     def round(self, state, K, q_t, budgets, gamma, key):
         return _local_round(self.loss, self.max_steps, self.data, state,
                             K, q_t, budgets, gamma, key)
+
+    def scan_round_fn(self):
+        return _local_round
 
 
 @partial(jax.jit, static_argnums=(0, 1))

@@ -13,6 +13,21 @@ metric recording, and the event-driven simulated federated wall-clock
 (``SystemsTrace``, eq. 30).  Under the ``semi_sync`` clock-cycle policy the
 trace caps each node's per-round budget to what fits the deadline -- the
 paper's theta_t^h controller.
+
+Two drivers execute the same W-round loop (DESIGN.md section 6):
+
+  * the **loop driver** steps rounds from Python, one engine dispatch plus
+    one host sync per round -- required by engines with host-side state
+    (``pallas`` caches, ``sharded`` pad caches);
+  * the **scanned driver** (engines with ``supports_scan``) pre-samples the
+    whole (rounds, m) budget matrix -- budgets and semi_sync deadline caps
+    are round-indexed, never state-dependent -- runs the W-round loop inside
+    ``lax.scan`` with metrics computed in-scan, and does a single host
+    transfer at the end; the SystemsTrace then retimes the executed budget
+    matrix, which is equivalent by construction (DESIGN.md section 4).
+
+Both are bit-identical on a fixed seed
+(tests/test_runtime.py::test_scan_loop_driver_parity).
 """
 from __future__ import annotations
 
@@ -31,12 +46,16 @@ from repro.core.engine import RoundEngine, get_engine
 from repro.core.losses import get_loss
 from repro.core.regularizers import Regularizer, sigma_prime
 from repro.core.systems_model import SystemsConfig, SystemsTrace
-from repro.core.theta import BudgetConfig, round_budgets, validate_assumption2
+from repro.core.theta import (BudgetConfig, presample_budgets, round_budgets,
+                              round_key_schedule, validate_assumption2)
 
 Array = jax.Array
 
-#: every engine emits exactly these history keys (tested for parity)
+#: every engine emits exactly these history keys (tested for parity); every
+#: column follows the ``record_every`` cadence, so histories are rectangular
 HISTORY_KEYS = ("round", "dual", "primal", "gap", "time", "round_max_steps")
+
+DRIVERS = ("auto", "scan", "loop")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +71,7 @@ class MochaConfig:
     systems: Optional[SystemsConfig] = None  # full systems model; overrides network
     seed: int = 0
     record_every: int = 1
+    driver: str = "auto"               # auto | scan | loop (DESIGN.md section 6)
 
 
 @dataclasses.dataclass
@@ -67,12 +87,30 @@ class RunResult:
         return self.history[key][-1]
 
 
-@partial(jax.jit, static_argnums=(0,))
-def _metrics(loss, data, state, abar, K):
+def _metrics_impl(loss, data, state, abar, K):
     dual_val = dual_mod.dual_objective(data, loss, K, state.alpha, state.v)
     W = dual_mod.primal_weights(K, state.v)
     primal_val = dual_mod.primal_objective(data, loss, abar, W)
     return dual_val, primal_val, primal_val + dual_val
+
+
+_metrics = partial(jax.jit, static_argnums=(0,))(_metrics_impl)
+
+
+def _record_rounds(rounds: int, record_every: int) -> np.ndarray:
+    rec = np.zeros(rounds, bool)
+    rec[::record_every] = True
+    rec[rounds - 1] = True
+    return rec
+
+
+def _coupling_terms(reg: Regularizer, omega: Array, gamma: float,
+                    per_task_sigma: bool, m: int):
+    abar = reg.coupling(omega)
+    K = jnp.linalg.inv(abar)
+    sig = sigma_prime(K, gamma, per_task=per_task_sigma)
+    q_t = sig * jnp.diagonal(K) / 2.0 * jnp.ones((m,))
+    return abar, K, q_t
 
 
 def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
@@ -88,24 +126,45 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
     ``cfg.engine`` (accepts a name, class, or configured instance);
     ``trace`` supplies a pre-built SystemsTrace (otherwise one is derived
     from ``cfg.systems`` / ``cfg.network``).
+
+    ``cfg.driver`` selects the execution strategy: ``auto`` uses the
+    device-resident scanned driver whenever the engine supports it
+    (``RoundEngine.supports_scan``) and falls back to the Python round loop
+    otherwise; ``scan`` / ``loop`` force one path.  The two drivers are
+    bit-identical on a fixed seed.
     """
     loss = get_loss(cfg.loss)
     validate_assumption2(cfg.budget)
+    if cfg.driver not in DRIVERS:
+        raise ValueError(f"driver {cfg.driver!r} not in {DRIVERS}")
     eng = get_engine(engine if engine is not None else cfg.engine)
+    if cfg.driver == "scan" and not eng.supports_scan:
+        raise ValueError(
+            f"engine {eng.name!r} does not support the scanned driver; "
+            "use driver='auto' or 'loop'")
     m = data.m
     omega = reg.init_omega(m) if omega0 is None else omega0
-    abar = reg.coupling(omega)
-    K = jnp.linalg.inv(abar)
-    sig = sigma_prime(K, cfg.gamma, per_task=cfg.per_task_sigma)
-    q_t = sig * jnp.diagonal(K) / 2.0 * jnp.ones((m,))
+    abar, K, q_t = _coupling_terms(reg, omega, cfg.gamma, cfg.per_task_sigma,
+                                   m)
 
     max_steps = cfg.budget.max_steps(data.n_max)
     state = eng.setup(data, loss, max_steps)
     if trace is None:
         sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
         trace = SystemsTrace(m, data.d, sys_cfg)
-    key = jax.random.PRNGKey(cfg.seed)
 
+    run = (_run_scanned if cfg.driver != "loop" and eng.supports_scan
+           else _run_loop)
+    return run(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
+               max_steps, budget_fn)
+
+
+def _run_loop(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
+              max_steps, budget_fn) -> RunResult:
+    """Python round loop: one engine dispatch + one host sync per round."""
+    m = data.m
+    key = jax.random.PRNGKey(cfg.seed)
+    record = _record_rounds(cfg.rounds, cfg.record_every)
     history: Dict[str, List[float]] = {k: [] for k in HISTORY_KEYS}
     budgets_log: List[np.ndarray] = []
 
@@ -118,35 +177,149 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
         budgets = jnp.minimum(budgets, max_steps)
         cap = trace.begin_round()
         if cap is not None:   # semi_sync: fit the work to the clock cycle
+            # clamp to max_steps BEFORE the int32 cast: a generous deadline
+            # gives int64 caps past 2^31, and budgets never exceed max_steps
+            # anyway, so the clamp is semantics-free
+            cap = np.minimum(cap, max_steps)
             budgets = jnp.minimum(budgets, jnp.asarray(cap, budgets.dtype))
         state = eng.round(state, K, q_t, budgets, cfg.gamma, k_round)
         steps_np = np.asarray(budgets)
         trace.commit(steps_np)
         budgets_log.append(steps_np.astype(np.int64))
-        history["round_max_steps"].append(int(steps_np.max()))
 
         if cfg.omega_update_every and (h + 1) % cfg.omega_update_every == 0:
             W = dual_mod.primal_weights(K, state.v)
             omega = reg.update_omega(W, omega)
-            abar = reg.coupling(omega)
-            K = jnp.linalg.inv(abar)
-            sig = sigma_prime(K, cfg.gamma, per_task=cfg.per_task_sigma)
-            q_t = sig * jnp.diagonal(K) / 2.0 * jnp.ones((m,))
+            abar, K, q_t = _coupling_terms(reg, omega, cfg.gamma,
+                                           cfg.per_task_sigma, m)
             # NOTE: Omega changed => the dual problem changed. v = X alpha is
             # Omega-independent; W(alpha) and the objectives pick up the new K.
 
-        if h % cfg.record_every == 0 or h == cfg.rounds - 1:
+        if record[h]:
             dual_val, primal_val, gap = _metrics(loss, data, state, abar, K)
             history["round"].append(h)
             history["dual"].append(float(dual_val))
             history["primal"].append(float(primal_val))
             history["gap"].append(float(gap))
             history["time"].append(trace.elapsed_s)
+            history["round_max_steps"].append(int(steps_np.max()))
 
     W = dual_mod.primal_weights(K, state.v)
     return RunResult(W=np.asarray(W), omega=np.asarray(omega), state=state,
                      history=history, trace=trace,
                      round_budgets=np.stack(budgets_log))
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _scan_rounds(round_fn, loss, max_steps, data, state, K, abar, q_t, gamma,
+                 keys, budgets, recs):
+    """One device-resident segment of W-rounds (constant Omega/K).
+
+    Scans the engine's pure round function (``RoundEngine.scan_round_fn``, a
+    stable module-level callable so jit caching works) over pre-sampled
+    (per-round key, budgets, record flag) rows; metrics are computed in-scan
+    only on record rounds (``lax.cond`` skips the objective evaluation
+    otherwise), so the stacked (rounds, 3) metric rows are the only
+    per-round output.
+    """
+
+    def body(st, xs):
+        k_round, b, rec = xs
+        st = round_fn(loss, max_steps, data, st, K, q_t, b, gamma, k_round)
+        row = jax.lax.cond(
+            rec,
+            lambda s: jnp.stack(_metrics_impl(loss, data, s, abar, K)),
+            lambda s: jnp.zeros((3,), K.dtype),
+            st)
+        return st, row
+
+    return jax.lax.scan(body, state, (keys, budgets, recs))
+
+
+def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
+                 max_steps, budget_fn) -> RunResult:
+    """Device-resident driver: the W-round loop runs inside ``lax.scan``.
+
+    Budgets (and semi_sync deadline caps) are round-indexed, so the whole
+    (rounds, m) schedule is pre-sampled up front; Omega refreshes partition
+    the run into segments (K/Abar constant within a segment) and each segment
+    is one scan dispatch.  The executed budget matrix is transferred once at
+    the end and replayed through the SystemsTrace (DESIGN.md section 6).
+    """
+    m, rounds = data.m, cfg.rounds
+    budget_keys, round_keys = round_key_schedule(
+        jax.random.PRNGKey(cfg.seed), rounds)
+    if budget_fn is not None:
+        budgets_all = jnp.stack([budget_fn(budget_keys[h], data.n_t, h)
+                                 for h in range(rounds)])
+    else:
+        budgets_all = presample_budgets(cfg.budget, budget_keys, data.n_t)
+    budgets_all = jnp.minimum(budgets_all, max_steps)
+    caps = trace.presample_caps(rounds)
+    if caps is not None:
+        # same pre-cast clamp as the loop driver (int64 caps can exceed int32)
+        caps = np.minimum(caps, max_steps)
+        budgets_all = jnp.minimum(budgets_all,
+                                  jnp.asarray(caps, budgets_all.dtype))
+
+    record = _record_rounds(rounds, cfg.record_every)
+    every = cfg.omega_update_every
+    round_fn = eng.scan_round_fn()
+    metric_rows: List[Optional[tuple]] = [None] * rounds  # device scalars
+    seg_slices: List[tuple] = []          # (h0, h_end, recs, device rows)
+
+    h0 = 0
+    while h0 < rounds:
+        h_end = min(rounds, (h0 // every + 1) * every) if every else rounds
+        recs = record[h0:h_end].copy()
+        tail_update = bool(every) and h_end % every == 0
+        if tail_update and recs[-1]:
+            recs[-1] = False  # metrics for an Omega round use the POST-update K
+        state, rows = _scan_rounds(round_fn, loss, max_steps, data, state, K,
+                                   abar, q_t, cfg.gamma,
+                                   round_keys[h0:h_end],
+                                   budgets_all[h0:h_end], jnp.asarray(recs))
+        seg_slices.append((h0, h_end, recs, rows))
+        if tail_update:
+            W = dual_mod.primal_weights(K, state.v)
+            omega = reg.update_omega(W, omega)
+            abar, K, q_t = _coupling_terms(reg, omega, cfg.gamma,
+                                           cfg.per_task_sigma, m)
+            if record[h_end - 1]:
+                metric_rows[h_end - 1] = _metrics(loss, data, state, abar, K)
+        h0 = h_end
+
+    # single host transfer: executed budgets + stacked in-scan metric rows
+    executed = np.asarray(budgets_all).astype(np.int64)
+    trace.replay(executed)
+    # only THIS run's events: a pre-used trace already holds earlier rounds,
+    # and times() is cumulative over all of them (loop-parity: the loop
+    # records trace.elapsed_s, which also continues the prior clock)
+    times = trace.times()[-rounds:]
+    history: Dict[str, List[float]] = {k: [] for k in HISTORY_KEYS}
+    seg_np = [(h0s, recs, np.asarray(rows))
+              for (h0s, _, recs, rows) in seg_slices]
+    eager_np = {h: tuple(float(x) for x in row)
+                for h, row in enumerate(metric_rows) if row is not None}
+    for h0s, recs, rows in seg_np:
+        for i, rec in enumerate(recs):
+            h = h0s + i
+            if rec:
+                eager_np[h] = tuple(float(x) for x in rows[i])
+    for h in range(rounds):
+        if not record[h]:
+            continue
+        dual_val, primal_val, gap = eager_np[h]
+        history["round"].append(h)
+        history["dual"].append(dual_val)
+        history["primal"].append(primal_val)
+        history["gap"].append(gap)
+        history["time"].append(float(times[h]))
+        history["round_max_steps"].append(int(executed[h].max()))
+
+    W = dual_mod.primal_weights(K, state.v)
+    return RunResult(W=np.asarray(W), omega=np.asarray(omega), state=state,
+                     history=history, trace=trace, round_budgets=executed)
 
 
 def run_cocoa(data: FederatedData, reg: Regularizer, cfg: MochaConfig,

@@ -153,7 +153,14 @@ class Clustered(Regularizer):
 
         lo, hi = jax.lax.fori_loop(0, 64, bisect, (lo, hi))
         w = omega_of(0.5 * (lo + hi))
-        return (q * w) @ q.T
+        # cold start (W = 0, e.g. the first refresh from the zero iterate):
+        # the spectrum is degenerate and the bisection has no signal, so the
+        # result would violate tr(Omega) = k. Keep the uninformative prior,
+        # exactly as Probabilistic guards its trace normalization.
+        m = W.shape[0]
+        return jnp.where(jnp.sum(svals) > 1e-10,
+                         (q * w) @ q.T,
+                         jnp.eye(m) * (self.k / m))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,7 +213,7 @@ class Graphical(Regularizer):
 
     def penalty(self, W: Array, omega: Array) -> Array:
         base = super().penalty(W, omega)
-        sign, logdet = jnp.linalg.slogdet(omega)
+        logdet = jnp.linalg.slogdet(omega)[1]
         return (base - self.lam * self.d_scale * logdet
                 + self.lam2 * jnp.sum(jnp.abs(omega)))
 

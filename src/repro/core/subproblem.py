@@ -40,20 +40,30 @@ def subproblem_value(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
     return jnp.sum(conj) + jnp.dot(w_t, u) + 0.5 * q_t * jnp.dot(u, u)
 
 
-def local_sdca(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
-               alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
-               key: Array, max_steps: int) -> Tuple[Array, Array]:
-    """Run up to ``max_steps`` SDCA coordinate updates, masked past budget_t.
+#: point count above which the chunked solver wins: each coordinate step
+#: reads AND writes the carried dalpha buffer, which XLA materializes as an
+#: O(n) copy per step; past ~8k points that copy dominates the O(d) math
+_CHUNK_THRESHOLD = 8192
+_CHUNK = 128
 
-    Returns (dalpha_t (n,), u_t (d,)) with u_t = X_t^T dalpha_t accumulated
-    incrementally (this is the Delta v_t the node ships back).
-    """
+
+def _draw_coordinates(X_t: Array, mask_t: Array, key: Array,
+                      max_steps: int) -> Array:
+    """The shared coordinate stream (DESIGN.md section 2): uniform draws over
+    the real (left-packed) points.  The Pallas kernel reproduces this stream
+    exactly; every solver variant must consume it unchanged."""
     n = X_t.shape[0]
     n_t = jnp.maximum(jnp.sum(mask_t), 1.0)
-    xnorm2 = jnp.sum(X_t * X_t, axis=1)
     draws = jax.random.uniform(key, (max_steps,))
-    # coordinates uniform over the real (left-packed) points
-    idx = jnp.minimum((draws * n_t).astype(jnp.int32), n - 1)
+    return jnp.minimum((draws * n_t).astype(jnp.int32), n - 1)
+
+
+def _local_sdca_dense(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
+                      alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
+                      key: Array, max_steps: int) -> Tuple[Array, Array]:
+    n = X_t.shape[0]
+    xnorm2 = jnp.sum(X_t * X_t, axis=1)
+    idx = _draw_coordinates(X_t, mask_t, key, max_steps)
 
     def body(s, carry):
         dalpha, u = carry
@@ -77,6 +87,80 @@ def local_sdca(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
     u0 = jnp.zeros(X_t.shape[1], X_t.dtype)
     dalpha, u = jax.lax.fori_loop(0, max_steps, body, (dalpha0, u0))
     return dalpha, u
+
+
+def _local_sdca_chunked(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
+                        alpha_t: Array, w_t: Array, q_t: Array,
+                        budget_t: Array, key: Array,
+                        max_steps: int) -> Tuple[Array, Array]:
+    """Large-n variant: identical draws and arithmetic, compact accumulator.
+
+    Steps run in chunks of ``_CHUNK``; each chunk accumulates its deltas in a
+    chunk-local buffer indexed by first occurrence of the drawn coordinate,
+    seeded with the running dalpha totals and written back once per chunk.
+    The partial sums hit the full (n,) buffer once per chunk instead of once
+    per step, killing the per-step O(n) carry copy, while every add happens
+    on the same values in the same order as the dense solver -- the two are
+    bit-identical (tests/test_subproblem.py).
+    """
+    n, d = X_t.shape
+    xnorm2 = jnp.sum(X_t * X_t, axis=1)
+    idx = _draw_coordinates(X_t, mask_t, key, max_steps)
+    # the dense solver's fori_loop bound caps work at max_steps implicitly;
+    # clamp here so the padded-tail deadness (s >= max_steps >= budget_t)
+    # holds for ANY caller-supplied budget, keeping the variants identical
+    budget_t = jnp.minimum(budget_t, max_steps)
+    C = min(_CHUNK, max_steps)
+    n_chunks = -(-max_steps // C)
+    pad = n_chunks * C - max_steps
+    # padded steps have s >= max_steps >= budget_t, so they are never live
+    idx_p = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+    idx_c = idx_p.reshape(n_chunks, C)
+    eq = idx_c[:, :, None] == idx_c[:, None, :]
+    firstpos = jnp.argmax(eq, axis=2).astype(jnp.int32)
+    is_first = firstpos == jnp.arange(C, dtype=jnp.int32)[None, :]
+    wb_idx = jnp.where(is_first, idx_c, n)     # n is out of bounds -> dropped
+
+    def chunk_body(c, carry):
+        dalpha, u = carry
+        ic, fpos, wb = idx_c[c], firstpos[c], wb_idx[c]
+        compact = dalpha[ic]     # running totals at the chunk's coordinates
+
+        def body(s, inner):
+            compact, u = inner
+            i, j = ic[s], fpos[s]
+            x = X_t[i]
+            a = alpha_t[i] + compact[j]
+            g_dot_x = jnp.sum(x * w_t) + fp_barrier(q_t * jnp.sum(x * u))
+            delta = loss.sdca_delta(a, y_t[i], g_dot_x, q_t * xnorm2[i])
+            live = ((c * C + s < budget_t)
+                    & (mask_t[i] > 0)).astype(delta.dtype)
+            delta = delta * live
+            return compact.at[j].add(delta), u + fp_barrier(delta * x)
+
+        compact, u = jax.lax.fori_loop(0, C, body, (compact, u))
+        return dalpha.at[wb].set(compact, mode="drop"), u
+
+    dalpha0 = jnp.zeros(n, X_t.dtype)
+    u0 = jnp.zeros(d, X_t.dtype)
+    return jax.lax.fori_loop(0, n_chunks, chunk_body, (dalpha0, u0))
+
+
+def local_sdca(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
+               alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
+               key: Array, max_steps: int) -> Tuple[Array, Array]:
+    """Run up to ``max_steps`` SDCA coordinate updates, masked past budget_t.
+
+    Returns (dalpha_t (n,), u_t (d,)) with u_t = X_t^T dalpha_t accumulated
+    incrementally (this is the Delta v_t the node ships back).  Dispatches on
+    the static point count to the chunked accumulator for large n (the two
+    variants are bit-identical; the chunked one avoids a per-step O(n) carry
+    copy that dominates pooled 'global model' problems).
+    """
+    solver = (_local_sdca_chunked if X_t.shape[0] >= _CHUNK_THRESHOLD
+              else _local_sdca_dense)
+    return solver(loss, X_t, y_t, mask_t, alpha_t, w_t, q_t, budget_t, key,
+                  max_steps)
 
 
 # vmapped across tasks: (m, n, d), (m, n), (m, n), (m, n), (m, d), (m,), (m,), (m, 2)

@@ -251,6 +251,43 @@ class SystemsTrace:
             self.begin_round()
         return self.commit(step_counts)
 
+    def presample_caps(self, rounds: int) -> Optional[np.ndarray]:
+        """Peek the next ``rounds`` rounds' semi_sync step caps WITHOUT
+        consuming them.
+
+        Caps are round-indexed (a pure function of the trace RNG stream),
+        never state-dependent, so a device-resident driver can fold them into
+        its pre-sampled budget matrix and replay the trace afterwards: the
+        RNG state is snapshotted and restored, so the subsequent
+        ``begin_round``/``commit`` replay sees exactly the draws previewed
+        here.  Returns None under the ``sync`` policy (no caps).
+        """
+        if self.cfg.policy != "semi_sync":
+            return None
+        if self._round_rates is not None:
+            raise RuntimeError("presample_caps called mid-round")
+        snapshot = self._rng.bit_generator.state
+        caps = np.empty((rounds, self.m), np.int64)
+        for r in range(rounds):
+            # reuse begin_round itself so the draw order matches the later
+            # replay by construction, then discard the un-committed round
+            caps[r] = self.begin_round()
+            self._round_rates = self._round_comm = self._cap = None
+        self._rng.bit_generator.state = snapshot
+        return caps
+
+    def replay(self, step_matrix: np.ndarray) -> None:
+        """Commit a recorded (rounds, m) executed-step matrix round by round.
+
+        Used by the scanned driver: budgets ran on device, the clock is
+        retimed afterwards.  Equivalent to the loop driver's interleaved
+        begin_round/commit because both the trace draws and the committed
+        steps are round-indexed (DESIGN.md section 4).
+        """
+        for row in np.asarray(step_matrix):
+            self.begin_round()
+            self.commit(row)
+
     # -- analysis -----------------------------------------------------------
 
     def utilization(self) -> np.ndarray:

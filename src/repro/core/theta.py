@@ -16,7 +16,8 @@ Assumption 2 requires p_max < 1; ``validate_assumption2`` checks it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +68,34 @@ def round_budgets(cfg: BudgetConfig, key: Array, n_t: Array) -> Array:
         budgets = budgets.at[cfg.never_send_node].set(0)
 
     return budgets
+
+
+@partial(jax.jit, static_argnums=(1,))
+def round_key_schedule(key: Array, rounds: int) -> Tuple[Array, Array]:
+    """Unroll the driver's per-round key chain into two (rounds,) key stacks.
+
+    Reproduces exactly the sequential discipline
+    ``key, k_budget, k_round = jax.random.split(key, 3)`` of the loop driver,
+    so budgets/draws pre-sampled from these keys are bit-identical to the
+    ones the loop would sample on the fly.
+    """
+
+    def step(k, _):
+        k, k_budget, k_round = jax.random.split(k, 3)
+        return k, (k_budget, k_round)
+
+    _, (budget_keys, round_keys) = jax.lax.scan(step, key, None, length=rounds)
+    return budget_keys, round_keys
+
+
+def presample_budgets(cfg: BudgetConfig, budget_keys: Array,
+                      n_t: Array) -> Array:
+    """Sample the full (rounds, m) step-budget matrix in one batched dispatch.
+
+    Budgets are round-indexed, never state-dependent, so the whole schedule
+    can be drawn up front and fed to the scanned driver / sweep harness.
+    """
+    return jax.vmap(lambda k: round_budgets(cfg, k, n_t))(budget_keys)
 
 
 def validate_assumption2(cfg: BudgetConfig) -> None:

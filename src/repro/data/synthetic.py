@@ -70,7 +70,6 @@ def make_federation(spec: FederationSpec, seed: int = 0, train_frac: float = 0.7
     """Generate (train, test) FederatedData for the spec."""
     rng = np.random.default_rng(seed)
     sizes = _sizes(rng, spec)
-    n_pad = int(sizes.max())
 
     # latent cluster structure in weight space
     centers = rng.normal(0.0, 1.0, (spec.clusters, spec.d)) / np.sqrt(spec.d)

@@ -147,6 +147,21 @@ def test_omega_learning_improves_generalization():
     assert np.mean(e_mtl) < np.mean(e_loc), (e_mtl, e_loc)
 
 
+@pytest.mark.parametrize("record_every", [1, 2, 3, 5])
+def test_history_columns_equal_length(problem, record_every):
+    """Regression: round_max_steps used to be appended every round while all
+    other keys followed record_every, yielding ragged history columns for any
+    record_every > 1."""
+    train, _ = problem
+    res = run_mocha(train, REG, MochaConfig(
+        loss="hinge", rounds=11, budget=BudgetConfig(passes=0.5),
+        record_every=record_every))
+    lengths = {k: len(v) for k, v in res.history.items()}
+    assert len(set(lengths.values())) == 1, f"ragged history: {lengths}"
+    expected = len({*range(0, 11, record_every), 10})
+    assert set(lengths.values()) == {expected}
+
+
 def test_history_time_axis_monotone(problem):
     train, _ = problem
     res = run_mocha(train, REG, MochaConfig(

@@ -52,6 +52,19 @@ def test_mean_regularized_omega_annihilates_constants():
     np.testing.assert_allclose(np.asarray(omega @ ones), 0.0, atol=1e-6)
 
 
+@pytest.mark.parametrize("m", [3, 6, 12])
+def test_clustered_update_cold_start_keeps_prior(m):
+    """Regression: with W = 0 the water-filling bisection has no spectral
+    signal; the update must keep the uninformative prior and in particular
+    honour the tr(Omega) = k constraint instead of collapsing."""
+    reg = Clustered(lam=1.0, eta=0.5, k=2)
+    omega0 = reg.init_omega(m)
+    omega = reg.update_omega(jnp.zeros((m, 16)), omega0)
+    np.testing.assert_allclose(float(jnp.trace(omega)), reg.k, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(omega), np.asarray(omega0),
+                               atol=1e-6)
+
+
 def test_probabilistic_update_trace_one():
     reg = Probabilistic()
     W = _rand_W(5, 8, seed=3)

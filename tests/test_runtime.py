@@ -1,13 +1,17 @@
 """Round-engine parity: local / pallas / sharded backends of the ONE driver
-produce bit-identical results, plus the shard_map runtime's own invariants."""
+produce bit-identical results -- as do the scanned and loop drivers -- plus
+the shard_map runtime's own invariants."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (HISTORY_KEYS, BudgetConfig, MeanRegularized,
-                        MochaConfig, PallasEngine, get_engine, get_loss,
-                        run_mocha, sigma_prime)
+                        MochaConfig, PallasEngine, Probabilistic, get_engine,
+                        get_loss, run_mocha, sigma_prime)
+from repro.core.systems_model import SystemsConfig
 from repro.data.synthetic import tiny_problem
 from repro.federated.runtime import distributed_round, make_federated_mesh
 from repro.federated.sharding import pad_task_matrix, pad_tasks, pad_vector
@@ -44,12 +48,93 @@ def test_engine_parity_bit_identical(engine_runs, other):
 
 def test_engine_history_schema_parity(engine_runs):
     """One schema across every engine (the old distributed driver dropped
-    round_max_steps); lengths consistent with the record cadence."""
+    round_max_steps); EVERY column follows the record cadence, so histories
+    are rectangular (the old driver appended round_max_steps per round)."""
+    # rounds=12, record_every=4 -> records at rounds 0, 4, 8 and the last (11)
     for e in ENGINES:
         h = engine_runs[e].history
         assert set(h) == set(HISTORY_KEYS)
-        assert len(h["round_max_steps"]) == 12      # one per round
-        assert len(h["time"]) == len(h["primal"])   # one per record point
+        lengths = {k: len(v) for k, v in h.items()}
+        assert set(lengths.values()) == {4}, lengths
+        assert h["round"] == [0, 4, 8, 11]
+
+
+# scan/loop driver parity scenarios: heterogeneous budgets + drops, gamma<1,
+# Omega refreshes, and the semi_sync clock-cycle deadline path
+_PARITY_CASES = {
+    "hetero": (MochaConfig(
+        loss="hinge", rounds=12,
+        budget=BudgetConfig(passes=1.0, systems_lo=0.5, drop_prob=0.3),
+        record_every=4, seed=3), MeanRegularized(0.5, 0.5)),
+    "gamma_half": (MochaConfig(
+        loss="smooth_hinge", rounds=15, gamma=0.5,
+        budget=BudgetConfig(passes=1.0), record_every=3, seed=1),
+        MeanRegularized(0.5, 0.5)),
+    "omega_refresh": (MochaConfig(
+        loss="hinge", rounds=20, omega_update_every=6, record_every=4,
+        seed=0), Probabilistic(lam=0.1, sigma2=10.0)),
+    "semi_sync": (MochaConfig(
+        loss="hinge", rounds=10, record_every=2, seed=5,
+        systems=SystemsConfig(network="3g", policy="semi_sync",
+                              clock_cycle_s=0.001, rate_lo=0.5, rate_hi=1.5,
+                              straggler_prob=0.3, comm_jitter=0.2)),
+        MeanRegularized(0.5, 0.5)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(_PARITY_CASES))
+def test_scan_loop_driver_parity(case):
+    """The device-resident scanned driver is bit-identical to the Python
+    round loop on a fixed seed: state, history, and executed budgets."""
+    train, _ = tiny_problem(m=5, n=24, d=6, seed=2)
+    cfg, reg = _PARITY_CASES[case]
+    loop = run_mocha(train, reg, dataclasses.replace(cfg, driver="loop"))
+    scan = run_mocha(train, reg, dataclasses.replace(cfg, driver="scan"))
+    np.testing.assert_array_equal(np.asarray(loop.state.alpha),
+                                  np.asarray(scan.state.alpha))
+    np.testing.assert_array_equal(np.asarray(loop.state.v),
+                                  np.asarray(scan.state.v))
+    np.testing.assert_array_equal(loop.W, scan.W)
+    np.testing.assert_array_equal(loop.round_budgets, scan.round_budgets)
+    assert loop.history == scan.history
+
+
+def test_scan_loop_parity_on_reused_trace():
+    """A pre-used SystemsTrace continues its clock: both drivers must record
+    the continuation times, not re-index from the trace's first event."""
+    from repro.core.systems_model import SystemsTrace
+    train, _ = tiny_problem(m=4, n=16, d=5, seed=7)
+    cfg = MochaConfig(loss="hinge", rounds=4, record_every=2, seed=2)
+    histories = {}
+    for driver in ("loop", "scan"):
+        trace = SystemsTrace(train.m, train.d, SystemsConfig(network="lte"))
+        trace.advance(np.full(train.m, 7))     # prior simulation activity
+        res = run_mocha(train, MeanRegularized(0.5, 0.5),
+                        dataclasses.replace(cfg, driver=driver), trace=trace)
+        assert res.history["time"][0] > trace.events[0].duration_s
+        histories[driver] = res.history
+    assert histories["loop"] == histories["scan"]
+
+
+def test_scan_driver_is_default_for_local():
+    """driver='auto' takes the scanned path on LocalEngine and matches it."""
+    train, _ = tiny_problem(m=4, n=16, d=5, seed=7)
+    cfg = MochaConfig(loss="hinge", rounds=8, record_every=3, seed=2)
+    auto = run_mocha(train, MeanRegularized(0.5, 0.5), cfg)
+    scan = run_mocha(train, MeanRegularized(0.5, 0.5),
+                     dataclasses.replace(cfg, driver="scan"))
+    assert auto.history == scan.history
+    np.testing.assert_array_equal(auto.W, scan.W)
+
+
+def test_scan_driver_rejected_without_capability():
+    train, _ = tiny_problem(m=4, n=16, d=5, seed=7)
+    cfg = MochaConfig(loss="hinge", rounds=2, engine="sharded", driver="scan")
+    with pytest.raises(ValueError, match="scanned driver"):
+        run_mocha(train, MeanRegularized(0.5, 0.5), cfg)
+    assert not get_engine("sharded").supports_scan
+    assert not get_engine("pallas").supports_scan
+    assert get_engine("local").supports_scan
 
 
 def test_engine_parity_dropped_node_through_pallas():

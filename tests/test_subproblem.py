@@ -111,3 +111,25 @@ def test_exact_solver_reaches_stationarity(setup):
         g2 = subproblem_value(loss, train.X[2], train.y[2], train.mask[2],
                               state.alpha[2], d2, W[2], q[2])
         assert float(g_star) - float(g2) < 1e-3
+
+
+@pytest.mark.parametrize("loss_name", ["hinge", "smooth_hinge", "logistic"])
+def test_chunked_solver_bit_identical_to_dense(loss_name):
+    """local_sdca dispatches to a chunked accumulator for large n; the two
+    variants must be bit-identical (same draws, same adds, same order)."""
+    from repro.core.subproblem import _local_sdca_chunked, _local_sdca_dense
+    rng = np.random.default_rng(3)
+    n, d = 300, 7   # force the chunked path on a small problem for the test
+    X = jnp.asarray(rng.normal(0, 1, (n, d)) / np.sqrt(d), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(0, 1, n)), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.8, jnp.float32)
+    alpha = jnp.asarray(rng.normal(0, 0.01, n), jnp.float32) * y * mask
+    w = jnp.asarray(rng.normal(0, 0.1, d), jnp.float32)
+    loss = get_loss(loss_name)
+    key = jax.random.PRNGKey(5)
+    budget = jnp.asarray(211, jnp.int32)   # not a chunk multiple
+    args = (loss, X, y, mask, alpha, w, jnp.asarray(0.7), budget, key, 300)
+    da_d, u_d = _local_sdca_dense(*args)
+    da_c, u_c = _local_sdca_chunked(*args)
+    np.testing.assert_array_equal(np.asarray(da_d), np.asarray(da_c))
+    np.testing.assert_array_equal(np.asarray(u_d), np.asarray(u_c))
