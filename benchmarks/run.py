@@ -66,12 +66,15 @@ def main() -> None:
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
 
     from benchmarks import (convergence, fig1_stragglers, fig2_systems,
-                            fig3_faults, roofline_report, table1_mtl,
-                            table4_skew)
+                            fig3_faults, roofline_report, sdca_micro,
+                            table1_mtl, table4_skew)
     suites = {
         "table1": table1_mtl, "table4": table4_skew,
         "fig1": fig1_stragglers, "fig2": fig2_systems, "fig3": fig3_faults,
-        "convergence": convergence, "roofline": roofline_report,
+        "convergence": convergence,
+        # sdca before roofline: it emits the results/roofline artifacts the
+        # report consumes (real HLO FLOP/byte rows)
+        "sdca": sdca_micro, "roofline": roofline_report,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only}

@@ -2,7 +2,7 @@
 from repro.core.dual import (DualState, FederatedData, compute_v,
                              dual_objective, duality_gap, init_state,
                              per_task_error, primal_objective, primal_weights,
-                             r_star)
+                             r_star, with_xnorm2)
 from repro.core.engine import (ENGINES, LocalEngine, PallasEngine,
                                RoundEngine, ShardedEngine, get_engine)
 from repro.core.losses import (HINGE, LOGISTIC, LOSSES, SMOOTH_HINGE, SQUARED,
@@ -17,8 +17,8 @@ from repro.core.regularizers import (REGULARIZERS, Clustered, Graphical,
                                      MeanRegularized, Probabilistic,
                                      Regularizer, sigma_prime, spd_inverse)
 from repro.core.subproblem import (batched_local_sdca, local_sdca,
-                                   measure_theta, solve_exact,
-                                   subproblem_value)
+                                   local_sdca_idx, measure_theta, row_norms,
+                                   solve_exact, subproblem_value)
 from repro.core.sweep import (SweepResult, run_sweep, stack_federations,
                               sweep_errors)
 from repro.core.theta import (BudgetConfig, presample_budgets, round_budgets,

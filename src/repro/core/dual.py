@@ -16,7 +16,7 @@ With coupling Abar (m x m SPD) and K = Abar^{-1}:
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,11 +27,20 @@ Array = jax.Array
 
 
 class FederatedData(NamedTuple):
-    """Padded per-task data for an m-node federated MTL problem."""
+    """Padded per-task data for an m-node federated MTL problem.
+
+    ``xnorm2`` is the per-run precomputed ``||x_t^i||^2`` table the SDCA
+    inner loop needs every round -- ``run_mocha`` fills it once per run via
+    ``with_xnorm2`` (the data is static, so recomputing it per round was
+    pure waste); ``None`` means "not precomputed" and solvers fall back to
+    computing it on the fly with the same pinned formula
+    (``repro.core.subproblem.row_norms``).
+    """
 
     X: Array      # (m, n_max, d)
     y: Array      # (m, n_max)
     mask: Array   # (m, n_max)
+    xnorm2: Optional[Array] = None   # (m, n_max) or None
 
     @property
     def m(self) -> int:
@@ -54,6 +63,17 @@ class FederatedData(NamedTuple):
     @property
     def n_total(self) -> Array:
         return jnp.sum(self.mask)
+
+
+def with_xnorm2(data: FederatedData) -> FederatedData:
+    """Fill the per-run ``xnorm2`` table (idempotent).
+
+    Computed through ``repro.core.subproblem.row_norms`` so the hoisted
+    table is bit-identical to what any solver would compute on the fly."""
+    if data.xnorm2 is not None:
+        return data
+    from repro.core.subproblem import row_norms
+    return data._replace(xnorm2=row_norms(data.X))
 
 
 class DualState(NamedTuple):

@@ -85,7 +85,7 @@ def _local_round(loss: Loss, max_steps: int, data: FederatedData,
     keys = jax.random.split(key, data.m)
     dalpha, u = batched_local_sdca(
         loss, data.X, data.y, data.mask, state.alpha, W, q_t,
-        budgets, keys, max_steps)
+        budgets, keys, max_steps, xnorm2=data.xnorm2)
     return DualState(alpha=state.alpha + gamma * dalpha,
                      v=state.v + gamma * u)
 

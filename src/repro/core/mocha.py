@@ -142,6 +142,10 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
         raise ValueError(
             f"engine {eng.name!r} does not support the scanned driver; "
             "use driver='auto' or 'loop'")
+    # hoist the static per-run SDCA precompute (row-norm table) ONCE: the
+    # data never changes across rounds, and every engine/driver below reads
+    # the same table, which also keeps it bit-identical across engines
+    data = dual_mod.with_xnorm2(data)
     m = data.m
     omega = reg.init_omega(m) if omega0 is None else omega0
     abar, K, q_t = _coupling_terms(reg, omega, cfg.gamma, cfg.per_task_sigma,

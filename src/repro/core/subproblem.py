@@ -16,11 +16,35 @@ node stopping early, and ``H_t = 0`` is exactly the paper's dropped node
 
 Padding convention: real data points are packed to the left of the n_max axis
 (mask[t, :n_t] == 1).  Random coordinate draws are made in [0, n_t).
+
+Arithmetic version 2 (DESIGN.md section 2): the coordinate loop runs in
+chunks of ``C`` drawn coordinates with a **fused residual carry**
+``r = w + q * u`` and one of two statically chosen residual modes:
+
+  * **carry** (``d > _GRAM_MAX_D``): each step computes one length-d
+    reduction ``sum(x * r)`` and one pinned axpy ``r += (q*delta) * x`` --
+    one O(d) reduction per step instead of the two the v1 loop needed;
+  * **gram**  (``d <= _GRAM_MAX_D``): ``G_c = X_c X_c^T`` and
+    ``p_c = X_c r`` are precomputed per chunk as (batched) GEMMs and the
+    sequential step work drops to O(C):
+    ``g = p_c[s] + fp_barrier(q * sum(G_c[s] * deltas))``; ``r`` is
+    reconstituted once per chunk from the chunk's delta column sum.
+
+Both modes share the chunk machinery: the drawn stream is padded to a chunk
+multiple (padded steps land past every budget, so they are provably dead),
+``u`` accumulates one column sum per chunk, and the inner C steps are
+unrolled so per-step indices into the chunk-local arrays are static.  The
+modes are exactly SDCA -- the Gram correction reconstructs
+``x_s . (r + q * sum_{j<s} delta_j x_j)`` term-for-term -- so they differ
+from each other and from the v1 loop only in floating-point association.
+The mode/chunk choice is a pure function of the *static* problem shape
+(``_solver_plan``), so every engine of a run agrees on it; all engines are
+bit-identical under it (tests/test_runtime.py).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +64,162 @@ def subproblem_value(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
     return jnp.sum(conj) + jnp.dot(w_t, u) + 0.5 * q_t * jnp.dot(u, u)
 
 
-#: point count above which the chunked solver wins: each coordinate step
-#: reads AND writes the carried dalpha buffer, which XLA materializes as an
-#: O(n) copy per step; past ~8k points that copy dominates the O(d) math
-_CHUNK_THRESHOLD = 8192
-_CHUNK = 128
+#: point count at and above which the compact chunk accumulator is used: the
+#: dense variant reads AND writes one element of the carried (n,) dalpha
+#: buffer per step, which XLA materializes as an O(n) copy per step; the
+#: compact variant touches the (n,) buffer once per chunk instead
+_CHUNK_THRESHOLD = 128
+#: chunk length (= Gram window) per residual mode, CPU-measured in
+#: BENCH_sdca.  The gram mode pays C*d GEMM FLOPs per step, so its window
+#: stays tight; the carry mode only uses the chunk for the dalpha
+#: accumulator and the u column sums, where a wide window amortizes chunk
+#: overhead at large d but loses to it at mid d.
+_GRAM_CHUNK = 32
+_CARRY_CHUNK_WIDE = 64     # d >= _CARRY_WIDE_D
+_CARRY_CHUNK_NARROW = 16
+_CARRY_WIDE_D = 512
+#: static feature-count crossover for the default residual mode: the Gram
+#: path trades the per-step O(d) reduction for C*d GEMM FLOPs per step,
+#: which pays off when d is small relative to the sequential-step cost
+#: (and on MXU-class hardware generally; measured on CPU in BENCH_sdca)
+_GRAM_MAX_D = 128
+
+
+def _solver_plan(d: int, max_steps: int,
+                 gram: Optional[bool] = None) -> Tuple[bool, int]:
+    """Static (gram?, chunk) choice shared by every engine.
+
+    A pure function of the static problem shape so the jnp solvers, the
+    Pallas kernel, and the sharded runtime all agree without plumbing a
+    config knob through the engine contract.  ``gram`` overrides the default
+    rule (benchmarks / tests exercise both modes at every shape).
+    """
+    if gram is None:
+        gram = d <= _GRAM_MAX_D
+    if gram:
+        C = _GRAM_CHUNK
+    else:
+        C = _CARRY_CHUNK_WIDE if d >= _CARRY_WIDE_D else _CARRY_CHUNK_NARROW
+    return gram, max(1, min(C, max_steps))
+
+
+class ChunkPlan(NamedTuple):
+    """Chunk layout of a drawn coordinate stream (shared across variants).
+
+    ``idx_c``:    (n_chunks, C) drawn coordinates, zero-padded past
+                  ``max_steps`` (padded steps sit past every clamped budget,
+                  so they are never live).
+    ``firstpos``: (n_chunks, C) position of the first occurrence of each
+                  coordinate within its chunk -- repeated draws accumulate
+                  into one compact slot so later steps see earlier deltas.
+    ``wb``:       (n_chunks, C) write-back scatter target: the coordinate at
+                  first occurrences, ``n`` (out of bounds -> dropped)
+                  elsewhere.
+    """
+
+    idx_c: Array
+    firstpos: Array
+    wb: Array
+
+
+def chunk_idx_stream(idx: Array, max_steps: int, C: int) -> Array:
+    """Zero-pad the drawn stream to a chunk multiple and reshape to chunks.
+
+    THE shared layout rule: the jnp solvers (via ``_chunk_layout``) and the
+    Pallas wrapper both derive their (.., n_chunks, C) view here, so the
+    padded-tail-is-dead invariant (pad coordinate 0 at positions
+    >= max_steps >= clamped budget) cannot drift between them.  Accepts a
+    (max_steps,) stream or a batched (m, max_steps) stack."""
+    n_chunks = -(-max_steps // C)
+    pad = n_chunks * C - max_steps
+    widths = [(0, 0)] * (idx.ndim - 1) + [(0, pad)]
+    return jnp.pad(idx, widths).reshape(idx.shape[:-1] + (n_chunks, C))
+
+
+def _chunk_layout(idx: Array, n: int, max_steps: int, C: int) -> ChunkPlan:
+    idx_c = chunk_idx_stream(idx, max_steps, C)
+    eq = idx_c[:, :, None] == idx_c[:, None, :]
+    firstpos = jnp.argmax(eq, axis=2).astype(jnp.int32)
+    is_first = firstpos == jnp.arange(C, dtype=jnp.int32)[None, :]
+    wb = jnp.where(is_first, idx_c, n)
+    return ChunkPlan(idx_c=idx_c, firstpos=firstpos, wb=wb)
+
+
+# ---------------------------------------------------------------------------
+# pinned-association chunk primitives (DESIGN.md section 2): ONE jnp source
+# of truth for every product-into-add of the inner loop.  The Pallas kernel
+# imports these, so kernel and reference cannot drift.
+# ---------------------------------------------------------------------------
+
+def _chunk_gram(Xc: Array) -> Array:
+    """G_c = X_c X_c^T via dot_general: (C, d) @ (d, C) -> (C, C).
+
+    Safe for cross-engine parity because BOTH sides compute it the same way
+    on identical gathered values -- batched (vmapped) and single-instance
+    dot_general agree bitwise per slice (pinned by the parity tests), unlike
+    the per-step length-d dots of the v1 loop, whose fusion context varied.
+    fp_barrier forces the chunk tensor to materialize once: without it XLA
+    may rematerialize it per consumer with a context-dependent reduction
+    association (same reason as the per-product barriers, one level up)."""
+    return fp_barrier(jnp.matmul(Xc, Xc.T))
+
+
+def _chunk_rowdots(Xc: Array, r: Array) -> Array:
+    """p_c[s] = sum(X_c[s] * r): per-row mul+reduce, the bit-stable lowering
+    the per-step ``sum(x * w)`` of the v1 loop relied on; fp_barrier'd so
+    the vector is computed once, not refused per consumer."""
+    return fp_barrier(jnp.sum(Xc * r[None, :], axis=1))
+
+
+def _chunk_colsum(Xc: Array, deltas: Array) -> Array:
+    """Chunk update column sum ``sum_s deltas[s] * X_c[s]`` (length d).
+
+    This single reduction replaces C per-step axpys: it is the chunk's
+    contribution to ``u`` and (scaled by q, behind its own barrier) to
+    ``r``; fp_barrier pins the reduce's association across contexts."""
+    return fp_barrier(jnp.sum(Xc * deltas[:, None], axis=0))
+
+
+def _carry_g(x_s: Array, r: Array) -> Array:
+    """Carry mode: g = <x_s, w + q u> as ONE reduction over the residual.
+
+    NOTE: a scalar-output length-d mul+reduce is only bit-stable across
+    execution contexts for d comfortably above a SIMD register's worth of
+    lanes (divergent partial-sum trees observed for d <= 32) -- which is
+    why ``_solver_plan`` never selects carry mode below ``_GRAM_MAX_D``:
+    forcing ``gram=False`` at small d is outside the parity contract."""
+    return jnp.sum(x_s * r)
+
+
+def _gram_g(p_s: Array, q_t: Array, G_s: Array, deltas: Array) -> Array:
+    """Gram mode: g = p_c[s] + q * sum(G_c[s] * deltas).
+
+    ``deltas`` holds this chunk's committed deltas (zeros at step s and
+    later), so the sum reconstructs x_s . (q * sum_{j<s} delta_j x_j)
+    exactly; the inner barrier pins the reduce's input (as in ``_carry_g``)
+    and the outer one pins the product into the add the same way the v1
+    loop pinned q * sum(x * u)."""
+    return p_s + fp_barrier(q_t * jnp.sum(fp_barrier(G_s * deltas)))
+
+
+def _carry_step_r(r: Array, q_t: Array, delta: Array, x_s: Array) -> Array:
+    """Carry mode per-step residual update, pinned: r += (q*delta) * x."""
+    return r + fp_barrier((q_t * delta) * x_s)
+
+
+def _gram_chunk_r(r: Array, q_t: Array, colsum: Array) -> Array:
+    """Gram mode per-chunk residual reconstitution, pinned: r += q * col."""
+    return r + fp_barrier(q_t * colsum)
+
+
+def row_norms(X: Array) -> Array:
+    """``||x_i||^2`` rows, barriered: THE xnorm2 used by every engine.
+
+    The barrier materializes the table so the reduce cannot be re-fused
+    into a consumer with a context-dependent partial-sum tree -- the hoisted
+    per-run table (``run_mocha``), the in-solver fallback, and the Pallas
+    wrapper's kernel input are then bit-identical by construction."""
+    return fp_barrier(jnp.sum(X * X, axis=-1))
 
 
 def _draw_coordinates(X_t: Array, mask_t: Array, key: Array,
@@ -58,113 +233,154 @@ def _draw_coordinates(X_t: Array, mask_t: Array, key: Array,
     return jnp.minimum((draws * n_t).astype(jnp.int32), n - 1)
 
 
+def _run_chunks(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
+                alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
+                idx: Array, max_steps: int, xnorm2: Array,
+                gram: bool, C: int, compact: bool,
+                unroll_chunks: bool = False) -> Tuple[Array, Array]:
+    """The arithmetic-v2 chunk loop, shared by both accumulator variants.
+
+    ``compact=False`` (dense) scatters each delta straight into the carried
+    (n,) dalpha buffer; ``compact=True`` accumulates into a chunk-local
+    buffer indexed by first occurrence and writes back once per chunk.  The
+    adds hit the same values in the same order either way, so the variants
+    are bit-identical (tests/test_subproblem.py).
+
+    ``unroll_chunks`` replaces the chunk ``fori_loop`` with a python loop
+    (bit-identical; the body is pure).  XLA's HLO cost analysis counts a
+    while-loop body once regardless of trip count, so cost probes
+    (benchmarks/sdca_micro.py) difference two unrolled depths instead --
+    the same methodology as launch/roofline.py's depth differencing.
+    """
+    n, d = X_t.shape
+    # clamp so the zero-padded chunk tail (s >= max_steps >= budget_t) is
+    # dead for ANY caller-supplied budget, in every variant and engine
+    budget_t = jnp.minimum(budget_t, max_steps)
+    plan = _chunk_layout(idx, n, max_steps, C)
+    n_chunks = plan.idx_c.shape[0]
+
+    def chunk_body(c, carry):
+        dalpha, u, r = carry
+        ic = plan.idx_c[c]
+        Xc = X_t[ic]
+        yc, xc2, mc, ac = y_t[ic], xnorm2[ic], mask_t[ic], alpha_t[ic]
+        if gram:
+            G = _chunk_gram(Xc)
+            p = _chunk_rowdots(Xc, r)
+        if compact:
+            fpos, wb = plan.firstpos[c], plan.wb[c]
+            acc = dalpha[ic]              # running totals, compacted
+        else:
+            acc = dalpha
+        deltas = jnp.zeros((C,), X_t.dtype)
+        # unrolled: s is static, so every chunk-local index below is static
+        for s in range(C):
+            k = fpos[s] if compact else ic[s]
+            a = ac[s] + acc[k]
+            g = (_gram_g(p[s], q_t, G[s], deltas) if gram
+                 else _carry_g(Xc[s], r))
+            delta = loss.sdca_delta(a, yc[s], g, q_t * xc2[s])
+            live = ((c * C + s < budget_t)
+                    & (mc[s] > 0)).astype(delta.dtype)
+            delta = delta * live
+            acc = acc.at[k].add(delta)
+            deltas = deltas.at[s].set(delta)
+            if not gram:
+                r = _carry_step_r(r, q_t, delta, Xc[s])
+        colsum = _chunk_colsum(Xc, deltas)
+        if gram:
+            r = _gram_chunk_r(r, q_t, colsum)
+        dalpha = (dalpha.at[wb].set(acc, mode="drop") if compact else acc)
+        return dalpha, u + colsum, r
+
+    carry = (jnp.zeros(n, X_t.dtype), jnp.zeros(d, X_t.dtype), w_t)
+    if unroll_chunks:
+        for c in range(n_chunks):
+            carry = chunk_body(c, carry)
+    else:
+        carry = jax.lax.fori_loop(0, n_chunks, chunk_body, carry)
+    dalpha, u, _ = carry
+    return dalpha, u
+
+
 def _local_sdca_dense(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
                       alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
-                      key: Array, max_steps: int) -> Tuple[Array, Array]:
-    n = X_t.shape[0]
-    xnorm2 = jnp.sum(X_t * X_t, axis=1)
-    idx = _draw_coordinates(X_t, mask_t, key, max_steps)
-
-    def body(s, carry):
-        dalpha, u = carry
-        i = idx[s]
-        x = X_t[i]
-        a = alpha_t[i] + dalpha[i]
-        # sum(x*w) not dot(x, w): the elementwise-mul+reduce lowering is
-        # bit-stable across execution contexts where dot_general is not, and
-        # fp_barrier pins product-into-add rounding that XLA would otherwise
-        # FMA-contract differently per fusion context -- together these keep
-        # the local and Pallas engines bit-identical
-        # (tests/test_runtime.py::test_engine_parity_bit_identical)
-        g_dot_x = jnp.sum(x * w_t) + fp_barrier(q_t * jnp.sum(x * u))
-        qxx = q_t * xnorm2[i]
-        delta = loss.sdca_delta(a, y_t[i], g_dot_x, qxx)
-        live = ((s < budget_t) & (mask_t[i] > 0)).astype(delta.dtype)
-        delta = delta * live
-        return dalpha.at[i].add(delta), u + fp_barrier(delta * x)
-
-    dalpha0 = jnp.zeros(n, X_t.dtype)
-    u0 = jnp.zeros(X_t.shape[1], X_t.dtype)
-    dalpha, u = jax.lax.fori_loop(0, max_steps, body, (dalpha0, u0))
-    return dalpha, u
+                      idx: Array, max_steps: int, xnorm2: Array,
+                      gram: bool, C: int,
+                      unroll_chunks: bool = False) -> Tuple[Array, Array]:
+    """Small-n variant: per-step scatter into the full (n,) dual buffer."""
+    return _run_chunks(loss, X_t, y_t, mask_t, alpha_t, w_t, q_t, budget_t,
+                       idx, max_steps, xnorm2, gram, C, compact=False,
+                       unroll_chunks=unroll_chunks)
 
 
 def _local_sdca_chunked(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
                         alpha_t: Array, w_t: Array, q_t: Array,
-                        budget_t: Array, key: Array,
-                        max_steps: int) -> Tuple[Array, Array]:
-    """Large-n variant: identical draws and arithmetic, compact accumulator.
+                        budget_t: Array, idx: Array, max_steps: int,
+                        xnorm2: Array, gram: bool, C: int,
+                        unroll_chunks: bool = False) -> Tuple[Array, Array]:
+    """Large-n variant: compact first-occurrence accumulator, one (n,)
+    write-back per chunk instead of one O(n) carry copy per step."""
+    return _run_chunks(loss, X_t, y_t, mask_t, alpha_t, w_t, q_t, budget_t,
+                       idx, max_steps, xnorm2, gram, C, compact=True,
+                       unroll_chunks=unroll_chunks)
 
-    Steps run in chunks of ``_CHUNK``; each chunk accumulates its deltas in a
-    chunk-local buffer indexed by first occurrence of the drawn coordinate,
-    seeded with the running dalpha totals and written back once per chunk.
-    The partial sums hit the full (n,) buffer once per chunk instead of once
-    per step, killing the per-step O(n) carry copy, while every add happens
-    on the same values in the same order as the dense solver -- the two are
-    bit-identical (tests/test_subproblem.py).
+
+def local_sdca_idx(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
+                   alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
+                   idx: Array, max_steps: int,
+                   xnorm2: Optional[Array] = None,
+                   gram: Optional[bool] = None,
+                   unroll_chunks: bool = False) -> Tuple[Array, Array]:
+    """Canonical SDCA local solve over an explicit coordinate stream.
+
+    THE single jnp source of truth for the inner-loop arithmetic: the Pallas
+    reference oracle (kernels/sdca/ref.py) and the key-driven entry points
+    below all delegate here.  ``xnorm2`` accepts the per-run hoisted row
+    norms (computed on the fly when absent); ``gram`` overrides the static
+    residual-mode rule (see ``_solver_plan``).
     """
-    n, d = X_t.shape
-    xnorm2 = jnp.sum(X_t * X_t, axis=1)
-    idx = _draw_coordinates(X_t, mask_t, key, max_steps)
-    # the dense solver's fori_loop bound caps work at max_steps implicitly;
-    # clamp here so the padded-tail deadness (s >= max_steps >= budget_t)
-    # holds for ANY caller-supplied budget, keeping the variants identical
-    budget_t = jnp.minimum(budget_t, max_steps)
-    C = min(_CHUNK, max_steps)
-    n_chunks = -(-max_steps // C)
-    pad = n_chunks * C - max_steps
-    # padded steps have s >= max_steps >= budget_t, so they are never live
-    idx_p = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
-    idx_c = idx_p.reshape(n_chunks, C)
-    eq = idx_c[:, :, None] == idx_c[:, None, :]
-    firstpos = jnp.argmax(eq, axis=2).astype(jnp.int32)
-    is_first = firstpos == jnp.arange(C, dtype=jnp.int32)[None, :]
-    wb_idx = jnp.where(is_first, idx_c, n)     # n is out of bounds -> dropped
-
-    def chunk_body(c, carry):
-        dalpha, u = carry
-        ic, fpos, wb = idx_c[c], firstpos[c], wb_idx[c]
-        compact = dalpha[ic]     # running totals at the chunk's coordinates
-
-        def body(s, inner):
-            compact, u = inner
-            i, j = ic[s], fpos[s]
-            x = X_t[i]
-            a = alpha_t[i] + compact[j]
-            g_dot_x = jnp.sum(x * w_t) + fp_barrier(q_t * jnp.sum(x * u))
-            delta = loss.sdca_delta(a, y_t[i], g_dot_x, q_t * xnorm2[i])
-            live = ((c * C + s < budget_t)
-                    & (mask_t[i] > 0)).astype(delta.dtype)
-            delta = delta * live
-            return compact.at[j].add(delta), u + fp_barrier(delta * x)
-
-        compact, u = jax.lax.fori_loop(0, C, body, (compact, u))
-        return dalpha.at[wb].set(compact, mode="drop"), u
-
-    dalpha0 = jnp.zeros(n, X_t.dtype)
-    u0 = jnp.zeros(d, X_t.dtype)
-    return jax.lax.fori_loop(0, n_chunks, chunk_body, (dalpha0, u0))
+    if xnorm2 is None:
+        xnorm2 = row_norms(X_t)
+    gram, C = _solver_plan(X_t.shape[1], max_steps, gram)
+    solver = (_local_sdca_chunked if X_t.shape[0] >= _CHUNK_THRESHOLD
+              else _local_sdca_dense)
+    return solver(loss, X_t, y_t, mask_t, alpha_t, w_t, q_t, budget_t,
+                  idx, max_steps, xnorm2, gram, C,
+                  unroll_chunks=unroll_chunks)
 
 
 def local_sdca(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,
                alpha_t: Array, w_t: Array, q_t: Array, budget_t: Array,
-               key: Array, max_steps: int) -> Tuple[Array, Array]:
+               key: Array, max_steps: int,
+               xnorm2: Optional[Array] = None,
+               gram: Optional[bool] = None) -> Tuple[Array, Array]:
     """Run up to ``max_steps`` SDCA coordinate updates, masked past budget_t.
 
     Returns (dalpha_t (n,), u_t (d,)) with u_t = X_t^T dalpha_t accumulated
-    incrementally (this is the Delta v_t the node ships back).  Dispatches on
-    the static point count to the chunked accumulator for large n (the two
-    variants are bit-identical; the chunked one avoids a per-step O(n) carry
-    copy that dominates pooled 'global model' problems).
+    from the per-chunk column sums (this is the Delta v_t the node ships
+    back).  Draws the shared coordinate stream from ``key`` and dispatches
+    on the static point count to the compact accumulator for large n.
     """
-    solver = (_local_sdca_chunked if X_t.shape[0] >= _CHUNK_THRESHOLD
-              else _local_sdca_dense)
-    return solver(loss, X_t, y_t, mask_t, alpha_t, w_t, q_t, budget_t, key,
-                  max_steps)
+    idx = _draw_coordinates(X_t, mask_t, key, max_steps)
+    return local_sdca_idx(loss, X_t, y_t, mask_t, alpha_t, w_t, q_t,
+                          budget_t, idx, max_steps, xnorm2, gram)
 
 
-# vmapped across tasks: (m, n, d), (m, n), (m, n), (m, n), (m, d), (m,), (m,), (m, 2)
-batched_local_sdca = jax.vmap(local_sdca, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, None))
+def batched_local_sdca(loss: Loss, X: Array, y: Array, mask: Array,
+                       alpha: Array, W: Array, q_t: Array, budgets: Array,
+                       keys: Array, max_steps: int,
+                       xnorm2: Optional[Array] = None,
+                       gram: Optional[bool] = None) -> Tuple[Array, Array]:
+    """vmap of ``local_sdca`` across tasks: (m, n, d), (m, n), ... (m, 2).
+
+    ``xnorm2`` (m, n) is the per-run hoisted row-norm table threaded through
+    ``run_mocha`` (recomputed here when absent -- e.g. dry-run lowerings)."""
+    if xnorm2 is None:
+        xnorm2 = row_norms(X)
+    fn = lambda X, y, mask, alpha, w, q, b, k, xn: local_sdca(
+        loss, X, y, mask, alpha, w, q, b, k, max_steps, xn, gram)
+    return jax.vmap(fn)(X, y, mask, alpha, W, q_t, budgets, keys, xnorm2)
 
 
 def solve_exact(loss: Loss, X_t: Array, y_t: Array, mask_t: Array,

@@ -121,6 +121,7 @@ def _sweep_exec(cfg: MochaConfig, template: Regularizer,
     rounds, every = cfg.rounds, cfg.omega_update_every
 
     def driver(d, pvals, key):
+        d = dual_mod.with_xnorm2(d)   # per-cell hoist of the static SDCA
         reg = dataclasses.replace(template, **dict(zip(vfields, pvals)))
         omega = reg.init_omega(m)
         abar, K, q_t = _coupling_terms(reg, omega, cfg.gamma,

@@ -76,14 +76,18 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
     """
     task_sharded = P("data")
     replicated = P()
+    # the per-run hoisted row-norm table is task-major state like X; compute
+    # it here only for direct callers (dry-run lowerings) that skip run_mocha
+    from repro.core.subproblem import row_norms
+    xnorm2 = data.xnorm2 if data.xnorm2 is not None else row_norms(data.X)
 
-    def shard_fn(X_sh, y_sh, mask_sh, alpha_sh, v_full, K_rows, q_sh,
+    def shard_fn(X_sh, y_sh, mask_sh, xn_sh, alpha_sh, v_full, K_rows, q_sh,
                  budgets_sh, keys_sh):
         # local W rows for this shard's tasks: w_t = 1/2 sum_s K_ts v_s
         W_sh = 0.5 * K_rows @ v_full
         dalpha, u = batched_local_sdca(
             loss, X_sh, y_sh, mask_sh, alpha_sh, W_sh, q_sh, budgets_sh,
-            keys_sh, max_steps)
+            keys_sh, max_steps, xnorm2=xn_sh)
         # THE federated communication: exchange Delta v blocks
         wire = u if comm_dtype is None else u.astype(comm_dtype)
         du_full = jax.lax.all_gather(wire, "data", tiled=True)
@@ -93,14 +97,15 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
     fn = shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(task_sharded, task_sharded, task_sharded, task_sharded,
-                  replicated, task_sharded, task_sharded, task_sharded,
-                  task_sharded),
+                  task_sharded, replicated, task_sharded, task_sharded,
+                  task_sharded, task_sharded),
         out_specs=(task_sharded, replicated),
         # the solver builds zero-initialized carries internally; their varying
         # manual axes are established by the first masked update
         check=False,
     )
-    return fn(data.X, data.y, data.mask, alpha, v, K, q_t, budgets, keys)
+    return fn(data.X, data.y, data.mask, xnorm2, alpha, v, K, q_t, budgets,
+              keys)
 
 
 def lower_federated_round(mesh: Mesh, loss: Loss, max_steps: int,

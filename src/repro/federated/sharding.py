@@ -27,7 +27,9 @@ def pad_tasks(data: FederatedData, shards: int) -> Tuple[FederatedData, int]:
     extra = m_pad - m
     pad = lambda a: jnp.concatenate(
         [a, jnp.zeros((extra,) + a.shape[1:], a.dtype)], axis=0)
-    return FederatedData(X=pad(data.X), y=pad(data.y), mask=pad(data.mask)), m
+    return FederatedData(
+        X=pad(data.X), y=pad(data.y), mask=pad(data.mask),
+        xnorm2=None if data.xnorm2 is None else pad(data.xnorm2)), m
 
 
 def pad_task_matrix(K: Array, m_pad: int) -> Array:

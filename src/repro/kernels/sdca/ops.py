@@ -30,4 +30,5 @@ def kernel_local_sdca(data, alpha, W, q_t, budgets, keys, max_steps,
     n_t = jnp.sum(data.mask, axis=1)
     idx = draw_coordinates(keys, n_t, data.n_max, max_steps)
     return sdca_local_solve(data.X, data.y, data.mask, alpha, W, q_t,
-                            budgets, idx, max_steps, interpret=interpret)
+                            budgets, idx, max_steps, interpret=interpret,
+                            xnorm2=data.xnorm2)

@@ -1,33 +1,34 @@
-"""Pure-jnp oracle for the SDCA kernel: repro.core.subproblem.local_sdca
-driven with an explicit coordinate sequence (hinge loss)."""
+"""Oracle for the SDCA kernel: the canonical solver driven with an explicit
+coordinate sequence (hinge loss).
+
+This used to be a hand-copied second implementation of the inner-loop
+arithmetic -- a standing parity hazard.  It now DELEGATES to
+``repro.core.subproblem.local_sdca_idx``, so the kernel's reference and the
+engines' solver are literally the same jnp source of truth."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
+
+from repro.core.losses import HINGE
+from repro.core.subproblem import local_sdca_idx
 
 
-def sdca_ref_one(X, y, mask, alpha, w, q, budget, idx):
+def sdca_ref_one(X, y, mask, alpha, w, q, budget, idx, gram=None,
+                 xnorm2=None):
     """Single task with explicit coordinate order idx (max_steps,)."""
-    n, d = X.shape
-    xnorm = jnp.sum(X * X, axis=-1)
-
-    def body(s, carry):
-        dalpha, u = carry
-        i = idx[s]
-        x = X[i]
-        a = alpha[i] + dalpha[i]
-        g_dot_x = jnp.dot(x, w + q * u)
-        qxx = q * xnorm[i]
-        abar = a * y[i]
-        step = (1.0 - y[i] * g_dot_x) / jnp.maximum(qxx, 1e-12)
-        abar_new = jnp.clip(abar + step, 0.0, 1.0)
-        live = ((s < budget) & (mask[i] > 0.0)).astype(jnp.float32)
-        delta = (abar_new - abar) * y[i] * live
-        return dalpha.at[i].add(delta), u + delta * x
-
-    return jax.lax.fori_loop(0, idx.shape[0], body,
-                             (jnp.zeros(n), jnp.zeros(d)))
+    return local_sdca_idx(HINGE, X, y, mask, alpha, w, q, budget, idx,
+                          idx.shape[0], xnorm2, gram)
 
 
-def sdca_ref(X, y, mask, alpha, W, q_t, budgets, idx):
-    return jax.vmap(sdca_ref_one)(X, y, mask, alpha, W, q_t, budgets, idx)
+def sdca_ref(X, y, mask, alpha, W, q_t, budgets, idx, gram=None,
+             xnorm2=None):
+    """Batched oracle.  ``xnorm2`` takes the per-run hoisted row-norm table
+    (as the engines thread it); bit-parity with the kernel presumes the two
+    consume the SAME table -- independently derived tables can differ by a
+    ulp at small d (see ``repro.core.subproblem.row_norms``)."""
+    if xnorm2 is None:
+        from repro.core.subproblem import row_norms
+        xnorm2 = row_norms(X)
+    fn = lambda X, y, mask, alpha, w, q, b, i, xn: sdca_ref_one(
+        X, y, mask, alpha, w, q, b, i, gram=gram, xnorm2=xn)
+    return jax.vmap(fn)(X, y, mask, alpha, W, q_t, budgets, idx, xnorm2)

@@ -2,16 +2,27 @@
 
 This is the per-node compute hot spot of Algorithm 1 (thousands of
 sequential coordinate updates over the node's local data block).  The grid
-iterates tasks; each instance pins its node's data block
-(n_pad, d) plus the dual/work vectors in VMEM and runs the budgeted
-coordinate loop with ``lax.fori_loop`` -- the TPU adaptation of a loop a
-GPU implementation would scatter across a warp (DESIGN.md §3).
+iterates tasks; each instance pins its node's data block (n, d) plus the
+dual/work vectors in VMEM and runs the budgeted coordinate loop chunk by
+chunk (DESIGN.md §3).
 
-VMEM working set: (n_pad * d + 2*d + 3*n_pad) * 4B; for the paper's largest
-federation (Vehicle Sensor: n_t <= 1933, d = 100) that is < 1 MiB.  Larger
-blocks tile n_pad; d is kept whole because the update u += delta * x is a
-full-row axpy.
+Arithmetic version 2 (DESIGN.md §2): the kernel mirrors
+``repro.core.subproblem`` chunk for chunk -- fused residual carry
+``r = w + q*u`` with the statically chosen residual mode:
 
+  * carry (d > _GRAM_MAX_D): per step one length-d reduction ``sum(x*r)``
+    and one pinned axpy into ``r``;
+  * gram (d <= _GRAM_MAX_D): per chunk ``G_c = X_c X_c^T`` (an MXU GEMM on
+    TPU) and ``p_c = X_c r``, then O(C) sequential work per step.
+
+The mode/chunk choice, the chunk-local Gram/row-dot/column-sum primitives,
+and the hinge coordinate update are all IMPORTED from
+``repro.core.subproblem`` / ``repro.core.losses`` -- the kernel contains no
+second copy of the arithmetic, so it cannot drift from the jnp solvers
+(bit-parity pinned by tests/test_runtime.py and tests/test_kernels.py).
+
+VMEM working set: (n*d + C*d + C^2 + 2*d + 3*n) * 4B; for the paper's
+largest federation (Vehicle Sensor: n_t <= 1933, d = 100) that is < 1 MiB.
 Hinge loss only (the paper's SVM experiments); the generic multi-loss path
 stays in repro/core/subproblem.py.  Validated against ref.py in interpret
 mode.
@@ -24,14 +35,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.utils.jax_compat import fp_barrier
+from repro.core.losses import HINGE
+from repro.core.subproblem import (_carry_g, _carry_step_r, _chunk_colsum,
+                                   _chunk_gram, _chunk_rowdots, _gram_chunk_r,
+                                   _gram_g, _solver_plan, chunk_idx_stream,
+                                   row_norms)
 
 
 def _sdca_kernel(x_ref, y_ref, mask_ref, alpha_ref, w_ref, xnorm_ref,
-                 idx_ref, qb_ref, dalpha_ref, u_ref, *, max_steps: int):
+                 idx_ref, qb_ref, dalpha_ref, u_ref, *,
+                 n_chunks: int, C: int, gram: bool):
     """One task. Refs:
-    x: (n, d); y/mask/alpha/xnorm: (n,); w: (d,); idx: (max_steps,);
-    qb: (2,) = [q_t, budget]; outputs dalpha: (n,), u: (d,)."""
+    x: (n, d); y/mask/alpha/xnorm: (n,); w: (d,); idx: (n_chunks, C);
+    qb: (2,) = [q_t, clamped budget]; outputs dalpha: (n,), u: (d,)."""
     n, d = x_ref.shape
     q = qb_ref[0]
     budget = qb_ref[1]
@@ -39,47 +55,61 @@ def _sdca_kernel(x_ref, y_ref, mask_ref, alpha_ref, w_ref, xnorm_ref,
     dalpha_ref[...] = jnp.zeros((n,), jnp.float32)
     u_ref[...] = jnp.zeros((d,), jnp.float32)
 
-    def body(s, _):
-        i = idx_ref[s]
-        x_i = pl.load(x_ref, (i, slice(None)))          # (d,)
-        y_i = y_ref[i]
-        a = alpha_ref[i] + dalpha_ref[i]
-        # sum(x*w) + fp_barrier around products-into-adds: matches the jnp
-        # reference solver op-for-op (bit-stable reduction lowering, no
-        # context-dependent FMA contraction), so local/pallas engine runs
-        # are bit-identical (test_runtime)
-        g_dot_x = jnp.sum(x_i * w_ref[...]) + fp_barrier(
-            q * jnp.sum(x_i * u_ref[...]))
-        qxx = q * xnorm_ref[i]
-        # hinge closed form: abar_new = clip(abar + (1 - y<x,g>)/qxx, 0, 1)
-        abar = a * y_i
-        step = (1.0 - fp_barrier(y_i * g_dot_x)) / jnp.maximum(qxx, 1e-12)
-        abar_new = jnp.clip(abar + step, 0.0, 1.0)
-        live = ((s < budget) & (mask_ref[i] > 0.0)).astype(jnp.float32)
-        delta = (abar_new - abar) * y_i * live
-        dalpha_ref[i] = dalpha_ref[i] + delta
-        u_ref[...] = u_ref[...] + fp_barrier(delta * x_i)
-        return 0
+    def chunk_body(c, r):
+        ic = idx_ref[c]                                   # (C,) int32
+        # gather the chunk's rows; s is static so the stack is unrolled
+        Xc = jnp.stack([pl.load(x_ref, (ic[s], slice(None)))
+                        for s in range(C)])               # (C, d)
+        if gram:
+            G = _chunk_gram(Xc)                           # MXU GEMM on TPU
+            p = _chunk_rowdots(Xc, r)
+        deltas = jnp.zeros((C,), jnp.float32)
+        for s in range(C):
+            i = ic[s]
+            a = alpha_ref[i] + dalpha_ref[i]
+            g = _gram_g(p[s], q, G[s], deltas) if gram else _carry_g(Xc[s], r)
+            delta = HINGE.sdca_delta(a, y_ref[i], g, q * xnorm_ref[i])
+            live = ((c * C + s < budget)
+                    & (mask_ref[i] > 0.0)).astype(jnp.float32)
+            delta = delta * live
+            dalpha_ref[i] = dalpha_ref[i] + delta
+            deltas = deltas.at[s].set(delta)
+            if not gram:
+                r = _carry_step_r(r, q, delta, Xc[s])
+        colsum = _chunk_colsum(Xc, deltas)
+        u_ref[...] = u_ref[...] + colsum
+        if gram:
+            r = _gram_chunk_r(r, q, colsum)
+        return r
 
-    jax.lax.fori_loop(0, max_steps, body, 0)
+    jax.lax.fori_loop(0, n_chunks, chunk_body, w_ref[...])
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_steps", "interpret"))
+                   static_argnames=("max_steps", "interpret", "gram"))
 def sdca_local_solve(X, y, mask, alpha, W, q_t, budgets, idx,
-                     max_steps: int, interpret: bool = True):
+                     max_steps: int, interpret: bool = True,
+                     gram=None, xnorm2=None):
     """Batched hinge-SDCA local solve.
 
     X: (m, n, d) f32; y/mask/alpha: (m, n); W: (m, d); q_t: (m,);
     budgets: (m,) int32; idx: (m, max_steps) int32 coordinate sequence.
-    Returns (dalpha (m, n), u (m, d)).
+    ``gram`` overrides the static residual-mode rule (None = shared
+    ``_solver_plan`` default); ``xnorm2`` accepts the per-run hoisted row
+    norms.  Returns (dalpha (m, n), u (m, d)).
     """
     m, n, d = X.shape
-    xnorm = jnp.sum(X * X, axis=-1)
+    xnorm = row_norms(X) if xnorm2 is None else xnorm2
+    gram, C = _solver_plan(d, max_steps, gram)
+    # padded steps have c*C + s >= max_steps >= clamped budget: never live
+    budgets = jnp.minimum(budgets, max_steps)
+    idx_c = chunk_idx_stream(idx, max_steps, C)
+    n_chunks = idx_c.shape[1]
     qb = jnp.stack([q_t.astype(jnp.float32),
                     budgets.astype(jnp.float32)], axis=1)   # (m, 2)
 
-    kernel = functools.partial(_sdca_kernel, max_steps=max_steps)
+    kernel = functools.partial(_sdca_kernel, n_chunks=n_chunks, C=C,
+                               gram=gram)
     dalpha, u = pl.pallas_call(
         kernel,
         grid=(m,),
@@ -90,7 +120,7 @@ def sdca_local_solve(X, y, mask, alpha, W, q_t, budgets, idx,
             pl.BlockSpec((None, n), lambda t: (t, 0)),
             pl.BlockSpec((None, d), lambda t: (t, 0)),
             pl.BlockSpec((None, n), lambda t: (t, 0)),
-            pl.BlockSpec((None, max_steps), lambda t: (t, 0)),
+            pl.BlockSpec((None, n_chunks, C), lambda t: (t, 0, 0)),
             pl.BlockSpec((None, 2), lambda t: (t, 0)),
         ],
         out_specs=[
@@ -102,5 +132,5 @@ def sdca_local_solve(X, y, mask, alpha, W, q_t, budgets, idx,
             jax.ShapeDtypeStruct((m, d), jnp.float32),
         ],
         interpret=interpret,
-    )(X, y, mask, alpha, W, xnorm, idx, qb)
+    )(X, y, mask, alpha, W, xnorm, idx_c, qb)
     return dalpha, u

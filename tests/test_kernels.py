@@ -137,8 +137,16 @@ def test_decode_mha_gqa_wrapper():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("m,n,d,steps", [(3, 16, 8, 32), (4, 32, 100, 64),
-                                         (2, 64, 16, 128), (1, 128, 50, 256)])
+                                         (2, 64, 16, 128), (1, 128, 50, 256),
+                                         (2, 48, 150, 64)])
 def test_sdca_kernel_matches_ref(m, n, d, steps):
+    """ref.py now DELEGATES to the canonical core solver, so kernel-vs-ref
+    is kernel-vs-engine-arithmetic: it must be bit-exact, not just close
+    (d spans both residual modes of the static _solver_plan rule).  Both
+    sides consume ONE hoisted xnorm2 table, exactly as the engines consume
+    run_mocha's per-run table (independently derived tables may differ by a
+    ulp at small d -- repro.core.subproblem.row_norms)."""
+    from repro.core.subproblem import row_norms
     X = _arr((m, n, d))
     y = jnp.sign(_arr((m, n)))
     mask = jnp.ones((m, n)).at[:, n - 3:].set(0.0)
@@ -147,10 +155,32 @@ def test_sdca_kernel_matches_ref(m, n, d, steps):
     q = jnp.asarray(RNG.uniform(0.5, 2.0, (m,)), jnp.float32)
     budgets = jnp.asarray(RNG.integers(0, steps, (m,)), jnp.int32)
     idx = jnp.asarray(RNG.integers(0, n - 3, (m, steps)), jnp.int32)
-    da, u = sdca_local_solve(X, y, mask, alpha, W, q, budgets, idx, steps)
-    dr, ur = sdca_ref(X, y, mask, alpha, W, q, budgets, idx)
-    np.testing.assert_allclose(np.asarray(da), np.asarray(dr), atol=1e-5)
-    np.testing.assert_allclose(np.asarray(u), np.asarray(ur), atol=1e-5)
+    xn = jax.jit(row_norms)(X)
+    da, u = sdca_local_solve(X, y, mask, alpha, W, q, budgets, idx, steps,
+                             xnorm2=xn)
+    dr, ur = sdca_ref(X, y, mask, alpha, W, q, budgets, idx, xnorm2=xn)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ur))
+
+
+def test_sdca_kernel_matches_ref_forced_gram():
+    """The Gram path is bit-exact at every d when forced explicitly (the
+    carry override below the crossover is outside the parity contract --
+    see subproblem._carry_g)."""
+    m, n, d, steps = 2, 40, 120, 96
+    X = _arr((m, n, d))
+    y = jnp.sign(_arr((m, n)))
+    mask = jnp.ones((m, n))
+    alpha = jnp.zeros((m, n))
+    W = _arr((m, d), scale=0.2)
+    q = jnp.asarray(RNG.uniform(0.5, 2.0, (m,)), jnp.float32)
+    budgets = jnp.asarray([70, 96], jnp.int32)
+    idx = jnp.asarray(RNG.integers(0, n, (m, steps)), jnp.int32)
+    da, u = sdca_local_solve(X, y, mask, alpha, W, q, budgets, idx, steps,
+                             gram=True)
+    dr, ur = sdca_ref(X, y, mask, alpha, W, q, budgets, idx, gram=True)
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(ur))
 
 
 def test_sdca_kernel_zero_budget_is_noop():

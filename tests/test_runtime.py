@@ -33,10 +33,7 @@ def engine_runs():
     return {e: run_mocha(train, REG, cfg, engine=e) for e in ENGINES}
 
 
-@pytest.mark.parametrize("other", ["pallas", "sharded"])
-def test_engine_parity_bit_identical(engine_runs, other):
-    """Same seed/budgets => bit-identical (alpha, v), W, and history."""
-    a, b = engine_runs["local"], engine_runs[other]
+def _assert_runs_bit_identical(a, b):
     np.testing.assert_array_equal(np.asarray(a.state.alpha),
                                   np.asarray(b.state.alpha))
     np.testing.assert_array_equal(np.asarray(a.state.v),
@@ -44,6 +41,55 @@ def test_engine_parity_bit_identical(engine_runs, other):
     np.testing.assert_array_equal(a.W, b.W)
     assert a.history == b.history
     np.testing.assert_array_equal(a.round_budgets, b.round_budgets)
+
+
+@pytest.mark.parametrize("other", ["pallas", "sharded"])
+def test_engine_parity_bit_identical(engine_runs, other):
+    """Same seed/budgets => bit-identical (alpha, v), W, and history."""
+    _assert_runs_bit_identical(engine_runs["local"], engine_runs[other])
+
+
+# engine-parity scenario matrix (DESIGN.md section 2): every engine must be
+# bit-identical under gamma < 1, Omega refreshes, the semi_sync clock-cycle
+# deadline path, and under BOTH residual modes of the v2 arithmetic --
+# d = 6 exercises the default gram mode, d = 72 the carry mode
+_ENGINE_CASES = {
+    "gamma_half": dict(
+        problem=dict(m=4, n=20, d=6, seed=4),
+        cfg=MochaConfig(loss="hinge", rounds=10, gamma=0.5,
+                        budget=BudgetConfig(passes=1.0), record_every=4,
+                        seed=1)),
+    "omega_refresh": dict(
+        problem=dict(m=4, n=20, d=6, seed=0),
+        cfg=MochaConfig(loss="hinge", rounds=12, omega_update_every=4,
+                        record_every=4, seed=0)),
+    "semi_sync": dict(
+        problem=dict(m=4, n=20, d=6, seed=5),
+        cfg=MochaConfig(loss="hinge", rounds=8, record_every=2, seed=5,
+                        systems=SystemsConfig(
+                            network="3g", policy="semi_sync",
+                            clock_cycle_s=0.001, rate_lo=0.5, rate_hi=1.5,
+                            straggler_prob=0.3, comm_jitter=0.2))),
+    "carry_mode": dict(   # d > _GRAM_MAX_D: the large-d residual-carry path
+        problem=dict(m=3, n=18, d=160, seed=2),
+        cfg=MochaConfig(loss="hinge", rounds=8,
+                        budget=BudgetConfig(passes=1.0, systems_lo=0.5,
+                                            drop_prob=0.3),
+                        record_every=3, seed=7)),
+}
+
+
+@pytest.mark.parametrize("other", ["pallas", "sharded"])
+@pytest.mark.parametrize("case", sorted(_ENGINE_CASES))
+def test_engine_parity_scenarios(case, other):
+    from repro.core.subproblem import _GRAM_MAX_D
+    spec = _ENGINE_CASES[case]
+    if case == "carry_mode":
+        assert spec["problem"]["d"] > _GRAM_MAX_D
+    train, _ = tiny_problem(**spec["problem"])
+    ref = run_mocha(train, REG, spec["cfg"], engine="local")
+    got = run_mocha(train, REG, spec["cfg"], engine=other)
+    _assert_runs_bit_identical(ref, got)
 
 
 def test_engine_history_schema_parity(engine_runs):
