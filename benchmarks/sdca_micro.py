@@ -37,7 +37,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import get_loss
-from repro.core.subproblem import _solver_plan, local_sdca_idx, row_norms
+from repro.core.subproblem import (_solver_plan, active_gram_max_d,
+                                   local_sdca_idx, row_norms)
 from repro.utils.jax_compat import fp_barrier
 
 ROOFLINE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
@@ -239,6 +240,10 @@ def run(quick: bool = True) -> List[Dict]:
             row = {
                 "bench": "sdca", "shape": tag, "variant": variant,
                 "m": m, "n": n, "d": d, "steps": steps, "C": C,
+                # the crossover in effect (REPRO_GRAM_MAX_D-overridable):
+                # rows from a TPU-retuned run are distinguishable from the
+                # CPU-default ones
+                "gram_max_d": active_gram_max_d(),
                 "us_per_call": t * 1e6,
                 "us_per_step": t * 1e6 / steps,
                 "speedup_vs_v1": speedup,

@@ -1,0 +1,204 @@
+"""``run_mocha_cohort``: cross-device MOCHA over a streaming population.
+
+One outer round (a *block*) is: sample a cohort of K clients from the
+population, pack it as an m=K federation, and run ``run_mocha`` on it --
+the SAME driver, engines, budget controller, and systems clock as the
+cross-silo path -- warm-started from the factored global state and with the
+cohort's expanded K x K relationship block as its (fixed) Omega.  The
+solved block is folded back into the O(m + k^2) ``ClusterOmega`` state and
+the next block is sampled.
+
+What stays device-resident / bounded:
+
+  * the inner W-round loop runs on ``run_mocha``'s scanned driver whenever
+    the engine supports it (selection, drops, and budgets are all
+    pre-sampled, so each block is one ``lax.scan`` program reused across
+    blocks -- shapes are static by construction: K and ``n_pad`` never
+    change);
+  * population state never materializes: O(K * n_pad * d) cohort tensors,
+    O(m) assignment/availability vectors, O(k^2 + k d) relationship state,
+    a bounded client cache.  No O(m^2) object exists anywhere
+    (tests/test_cohort.py pins the memory budget).
+
+With K = m, a uniform sampler, no dropout, and omega refreshes off, every
+block is exactly one full-participation MOCHA round over the (permuted)
+population with the equivalent fixed Omega -- the cohort driver degrades to
+plain ``run_mocha`` (the parity test in tests/test_cohort.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cohort.omega import ClusterOmega
+from repro.cohort.packing import pack_cohort
+from repro.cohort.population import Population
+from repro.cohort.sampler import CohortSampler, CohortSchedule
+from repro.core import dual as dual_mod
+from repro.core.dual import DualState
+from repro.core.mocha import HISTORY_KEYS, MochaConfig, _record_rounds, run_mocha
+from repro.core.regularizers import Regularizer
+from repro.core.systems_model import (SystemsConfig, SystemsTrace,
+                                      population_rates)
+from repro.core.theta import BudgetConfig, drop_masked_budgets
+
+#: domain-separation tag for per-block inner-driver seeds
+_BLOCK_STREAM = 0x626C6B   # "blk"
+
+#: MochaConfig fields CohortConfig mirrors verbatim -- THE one wiring point:
+#: a new shared knob needs a CohortConfig field plus one entry here
+_INNER_PASSTHROUGH = ("loss", "gamma", "per_task_sigma", "budget", "engine",
+                      "gram_max_d")
+
+#: the cohort history = the driver history + cross-device coverage
+COHORT_HISTORY_KEYS = HISTORY_KEYS + ("unique_clients",)
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortConfig:
+    """Cross-device run description (the outer layer over ``MochaConfig``)."""
+
+    loss: str = "hinge"
+    rounds: int = 100                  # cohort blocks (outer rounds)
+    cohort: int = 64                   # K sampled clients per block
+    inner_rounds: int = 1              # W-rounds run on each cohort
+    sampler: str = "uniform"           # uniform | weighted (availability)
+    dropout: float = 0.0               # selected-but-failed probability
+    clusters: int = 3                  # k of the factored relationship
+    eta: float = 0.5                   # per-client self-affinity in Omega_S
+    omega_update_every: int = 0        # blocks between cluster-Omega steps
+    cache_clients: int = 4096          # bounded warm-start/delta cache
+    gamma: float = 1.0
+    per_task_sigma: bool = True
+    budget: BudgetConfig = dataclasses.field(default_factory=BudgetConfig)
+    engine: str = "local"              # shards the COHORT, not the population
+    network: str = "lte"
+    systems: Optional[SystemsConfig] = None
+    seed: int = 0
+    record_every: int = 1
+    n_pad: Optional[int] = None        # None = PopulationSpec.pad_width
+    gram_max_d: Optional[int] = None   # threaded to MochaConfig
+
+
+@dataclasses.dataclass
+class CohortRunResult:
+    """Factored final state + per-block history (no O(m^2), no O(m*d))."""
+
+    relationship: ClusterOmega
+    history: Dict[str, List[float]]
+    trace: SystemsTrace
+    schedule: CohortSchedule
+    rate_mult: np.ndarray          # (m,) per-client hardware multipliers
+    #: (m,) blocks in which each client EXECUTED steps (the ground truth the
+    #: state updates used; ``schedule.participation_counts`` is only the
+    #: schedule-level upper bound -- budget drops happen below it)
+    participation: np.ndarray = None
+
+    @property
+    def omega_k(self) -> np.ndarray:
+        return self.relationship.omega_k
+
+    @property
+    def centroids(self) -> np.ndarray:
+        return self.relationship.centroids
+
+    @property
+    def assign(self) -> np.ndarray:
+        return self.relationship.assign
+
+    def client_weights(self, ids) -> np.ndarray:
+        """Serving weights for ANY client ids (cohort-sized, on demand)."""
+        return self.relationship.client_weights(np.asarray(ids))
+
+    def final(self, key: str) -> float:
+        return self.history[key][-1]
+
+
+def _block_seed(seed: int, block: int) -> int:
+    """Deterministic per-block inner-driver seed (domain-separated)."""
+    ss = np.random.SeedSequence([_BLOCK_STREAM, seed, block])
+    return int(ss.generate_state(1, np.uint32)[0])
+
+
+def run_mocha_cohort(pop: Population, reg: Regularizer,
+                     cfg: CohortConfig) -> CohortRunResult:
+    """Run cross-device MOCHA: ``cfg.rounds`` sampled-cohort blocks.
+
+    ``reg`` plays its usual two roles, both in cohort/cluster space: its
+    ``coupling`` turns the expanded K x K Omega block into the subproblem
+    coupling inside each ``run_mocha`` call, and its ``update_omega`` is
+    the central Omega step applied to the (k, d) centroid matrix every
+    ``omega_update_every`` blocks.
+    """
+    m, spec = pop.m, pop.spec
+    n_pad = int(cfg.n_pad or spec.pad_width)
+    state = ClusterOmega(m, cfg.clusters, spec.d, reg, eta=cfg.eta,
+                         cache_clients=cfg.cache_clients)
+
+    # population hardware: one O(m) multiplier vector drives BOTH the
+    # availability-weighted sampler and the per-block clock injection
+    sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
+    rate_mult = population_rates(m, sys_cfg)
+    sampler = CohortSampler(
+        m=m, cohort=cfg.cohort, kind=cfg.sampler, dropout=cfg.dropout,
+        weights=rate_mult if cfg.sampler == "weighted" else None)
+    schedule = sampler.presample(cfg.seed, cfg.rounds)
+
+    # cohort-slot trace: slot s hosts a different client each block, so the
+    # static per-slot rate draw is neutralized (rate_lo = rate_hi = 1) and
+    # the sampled clients' multipliers are injected per block
+    slot_cfg = dataclasses.replace(sys_cfg, rate_lo=1.0, rate_hi=1.0)
+    trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)
+
+    inner = MochaConfig(
+        rounds=cfg.inner_rounds, omega_update_every=0,
+        record_every=cfg.inner_rounds,
+        **{f: getattr(cfg, f) for f in _INNER_PASSTHROUGH})
+
+    record = _record_rounds(cfg.rounds, cfg.record_every)
+    history: Dict[str, List[float]] = {k: [] for k in COHORT_HISTORY_KEYS}
+    seen = np.zeros(m, bool)
+    n_seen = 0
+    participation = np.zeros(m, np.int64)
+
+    for b in range(cfg.rounds):
+        ids, dropped = schedule.ids[b], schedule.dropped[b]
+        data = pack_cohort(pop, ids, n_pad)
+        sizes = np.asarray(data.n_t).astype(np.int64)
+        alpha0 = jnp.asarray(state.cohort_alpha(ids, n_pad))
+        warm = DualState(alpha=alpha0, v=dual_mod.compute_v(data, alpha0))
+        trace.set_rate_scale(rate_mult[ids])
+        res = run_mocha(
+            data, reg, dataclasses.replace(inner, seed=_block_seed(cfg.seed, b)),
+            omega0=state.cohort_omega(ids),
+            budget_fn=drop_masked_budgets(
+                cfg.budget, np.broadcast_to(dropped, (cfg.inner_rounds,
+                                                      cfg.cohort))),
+            trace=trace, state0=warm)
+
+        participated = res.round_budgets.sum(axis=0) > 0
+        participation[ids[participated]] += 1
+        state.update(ids, res.W, res.state.alpha, sizes, participated)
+        if cfg.omega_update_every and (b + 1) % cfg.omega_update_every == 0:
+            state.refresh_omega(reg)
+
+        new = ids[participated & ~seen[ids]]
+        seen[new] = True
+        n_seen += new.size
+        if record[b]:
+            history["round"].append(b)
+            history["dual"].append(res.final("dual"))
+            history["primal"].append(res.final("primal"))
+            history["gap"].append(res.final("gap"))
+            history["time"].append(trace.elapsed_s)
+            # max over the block's EXECUTED budget matrix, not the inner
+            # history column (which subsamples to record rounds only)
+            history["round_max_steps"].append(int(res.round_budgets.max()))
+            history["unique_clients"].append(n_seen)
+
+    return CohortRunResult(relationship=state, history=history, trace=trace,
+                           schedule=schedule, rate_mult=rate_mult,
+                           participation=participation)

@@ -1,0 +1,55 @@
+"""Pack a sampled cohort into the padded ``FederatedData`` layout.
+
+The whole point of the cohort subsystem is that everything below the
+sampler is UNCHANGED: a packed cohort is a perfectly ordinary m=K
+federation, so ``run_mocha`` and all three round engines (local vmap /
+pallas kernel / shard_map) execute it as-is.  Sharding consequently
+distributes the K-task cohort over the mesh -- never the population
+(``federated.sharding.pad_tasks`` pads the cohort's task axis to the shard
+count exactly as for a static federation).
+
+Layout invariants preserved here:
+
+  * left-packed point axis with a fixed width (``PopulationSpec.pad_width``
+    by default), so every block of a run compiles to one program shape;
+  * ``xnorm2`` threaded: the per-run hoisted row-norm table is filled at
+    pack time through ``dual.with_xnorm2`` (the same pinned ``row_norms``
+    every engine reads), so a cohort block gets the identical solver
+    precompute a static federation gets.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cohort.population import Population
+from repro.core.dual import FederatedData, with_xnorm2
+
+
+def pack_cohort(pop: Population, ids: Sequence[int],
+                n_pad: Optional[int] = None) -> FederatedData:
+    """Materialize clients ``ids`` and pack them as an m=K federation.
+
+    Memory is O(K * n_pad * d) -- the cohort, never the population.  Slot
+    order follows ``ids`` (the schedule's order), so packing is
+    deterministic given a schedule.
+    """
+    spec = pop.spec
+    n_pad = int(n_pad or spec.pad_width)
+    K = len(ids)
+    X = np.zeros((K, n_pad, spec.d), np.float32)
+    y = np.zeros((K, n_pad), np.float32)
+    mask = np.zeros((K, n_pad), np.float32)
+    for slot, t in enumerate(ids):
+        block = pop.client_block(int(t))
+        if block.n > n_pad:
+            raise ValueError(
+                f"client {int(t)} has n_t={block.n} > n_pad={n_pad}; raise "
+                "PopulationSpec.n_pad (cohort shapes are static per run)")
+        X[slot, :block.n] = block.X
+        y[slot, :block.n] = block.y
+        mask[slot, :block.n] = 1.0
+    return with_xnorm2(FederatedData(
+        X=jnp.asarray(X), y=jnp.asarray(y), mask=jnp.asarray(mask)))

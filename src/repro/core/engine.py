@@ -17,8 +17,11 @@ mathematical round onto a different execution substrate:
                          exchanged with one all_gather (the paper's only
                          communication).
 
-Contract: ``setup(data, loss, max_steps)`` returns the initial real-size
-``DualState``; ``round(state, K, q_t, budgets, gamma, key)`` returns the
+Contract: ``setup(data, loss, max_steps, gram=None)`` returns the initial
+real-size ``DualState`` (``gram`` is the optional residual-mode override the
+driver resolves from ``MochaConfig.gram_max_d``; every engine must thread it
+to its solver so a re-tuned crossover stays engine-consistent);
+``round(state, K, q_t, budgets, gamma, key)`` returns the
 updated real-size state.  Engines may keep padded / device-resident internals,
 but the driver only ever sees (m, n_max) / (m, d) arrays, so metrics and the
 Omega update are engine-agnostic.  ``key`` is split into per-task keys with
@@ -57,7 +60,9 @@ class RoundEngine(abc.ABC):
 
     def scan_round_fn(self):
         """Pure round function for the scanned driver, called as
-        ``fn(loss, max_steps, data, state, K, q_t, budgets, gamma, key)``.
+        ``fn(loss, max_steps, gram, data, state, K, q_t, budgets, gamma,
+        key)`` (``gram`` = the setup-time residual-mode override, a static
+        argument like ``loss``/``max_steps``).
 
         Must be a stable module-level callable (it is a static jit argument)
         whose results are bit-identical to ``round``.  Only meaningful when
@@ -67,8 +72,8 @@ class RoundEngine(abc.ABC):
             f"engine {self.name!r} does not support the scanned driver")
 
     @abc.abstractmethod
-    def setup(self, data: FederatedData, loss: Loss,
-              max_steps: int) -> DualState:
+    def setup(self, data: FederatedData, loss: Loss, max_steps: int,
+              gram: Optional[bool] = None) -> DualState:
         """Bind the engine to a problem; return the initial dual state."""
 
     @abc.abstractmethod
@@ -77,15 +82,15 @@ class RoundEngine(abc.ABC):
         """One round: every node solves its local subproblem, server reduces."""
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _local_round(loss: Loss, max_steps: int, data: FederatedData,
-                 state: DualState, K: Array, q_t: Array, budgets: Array,
-                 gamma: float, key: Array) -> DualState:
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _local_round(loss: Loss, max_steps: int, gram: Optional[bool],
+                 data: FederatedData, state: DualState, K: Array, q_t: Array,
+                 budgets: Array, gamma: float, key: Array) -> DualState:
     W = dual_mod.primal_weights(K, state.v)
     keys = jax.random.split(key, data.m)
     dalpha, u = batched_local_sdca(
         loss, data.X, data.y, data.mask, state.alpha, W, q_t,
-        budgets, keys, max_steps, xnorm2=data.xnorm2)
+        budgets, keys, max_steps, xnorm2=data.xnorm2, gram=gram)
     return DualState(alpha=state.alpha + gamma * dalpha,
                      v=state.v + gamma * u)
 
@@ -96,28 +101,30 @@ class LocalEngine(RoundEngine):
     name = "local"
     supports_scan = True
 
-    def setup(self, data: FederatedData, loss: Loss,
-              max_steps: int) -> DualState:
+    def setup(self, data: FederatedData, loss: Loss, max_steps: int,
+              gram: Optional[bool] = None) -> DualState:
         self.data, self.loss, self.max_steps = data, loss, max_steps
+        self.gram = gram
         return dual_mod.init_state(data)
 
     def round(self, state, K, q_t, budgets, gamma, key):
-        return _local_round(self.loss, self.max_steps, self.data, state,
-                            K, q_t, budgets, gamma, key)
+        return _local_round(self.loss, self.max_steps, self.gram, self.data,
+                            state, K, q_t, budgets, gamma, key)
 
     def scan_round_fn(self):
         return _local_round
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _pallas_round(max_steps: int, interpret: bool, data: FederatedData,
-                  state: DualState, K: Array, q_t: Array, budgets: Array,
-                  gamma: float, key: Array) -> DualState:
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _pallas_round(max_steps: int, interpret: bool, gram: Optional[bool],
+                  data: FederatedData, state: DualState, K: Array,
+                  q_t: Array, budgets: Array, gamma: float,
+                  key: Array) -> DualState:
     from repro.kernels.sdca.ops import kernel_local_sdca
     W = dual_mod.primal_weights(K, state.v)
     keys = jax.random.split(key, data.m)
     dalpha, u = kernel_local_sdca(data, state.alpha, W, q_t, budgets, keys,
-                                  max_steps, interpret=interpret)
+                                  max_steps, interpret=interpret, gram=gram)
     return DualState(alpha=state.alpha + gamma * dalpha,
                      v=state.v + gamma * u)
 
@@ -135,20 +142,20 @@ class PallasEngine(RoundEngine):
     def __init__(self, interpret: Optional[bool] = None):
         self.interpret = interpret
 
-    def setup(self, data: FederatedData, loss: Loss,
-              max_steps: int) -> DualState:
+    def setup(self, data: FederatedData, loss: Loss, max_steps: int,
+              gram: Optional[bool] = None) -> DualState:
         if loss.name != "hinge":
             raise ValueError(
                 f"PallasEngine implements the hinge kernel only, got "
                 f"{loss.name!r}; use engine='local' for other losses.")
-        self.data, self.max_steps = data, max_steps
+        self.data, self.max_steps, self.gram = data, max_steps, gram
         self._interpret = (jax.default_backend() != "tpu"
                            if self.interpret is None else self.interpret)
         return dual_mod.init_state(data)
 
     def round(self, state, K, q_t, budgets, gamma, key):
-        return _pallas_round(self.max_steps, self._interpret, self.data,
-                             state, K, q_t, budgets, gamma, key)
+        return _pallas_round(self.max_steps, self._interpret, self.gram,
+                             self.data, state, K, q_t, budgets, gamma, key)
 
 
 class ShardedEngine(RoundEngine):
@@ -167,12 +174,12 @@ class ShardedEngine(RoundEngine):
         self._mesh_arg = mesh
         self.comm_dtype = comm_dtype
 
-    def setup(self, data: FederatedData, loss: Loss,
-              max_steps: int) -> DualState:
+    def setup(self, data: FederatedData, loss: Loss, max_steps: int,
+              gram: Optional[bool] = None) -> DualState:
         from repro.federated import sharding
         from repro.federated.runtime import make_federated_mesh
         self.mesh = self._mesh_arg or make_federated_mesh()
-        self.loss, self.max_steps = loss, max_steps
+        self.loss, self.max_steps, self.gram = loss, max_steps, gram
         self.data_p, _ = sharding.pad_tasks(data, self.mesh.devices.size)
         self.m_real, self.m_pad = data.m, self.data_p.m
         self._K_src = self._q_src = None
@@ -211,7 +218,7 @@ class ShardedEngine(RoundEngine):
         alpha, v = distributed_round(
             self.mesh, self.loss, self.max_steps, self.data_p, alpha, v,
             K_p, q_p, b_p, gamma, self._pad_keys(key),
-            comm_dtype=self.comm_dtype)
+            comm_dtype=self.comm_dtype, gram=self.gram)
         return DualState(alpha=alpha[:self.m_real], v=v[:self.m_real])
 
 

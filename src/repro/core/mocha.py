@@ -72,6 +72,12 @@ class MochaConfig:
     seed: int = 0
     record_every: int = 1
     driver: str = "auto"               # auto | scan | loop (DESIGN.md section 6)
+    #: per-run override of the SDCA residual-mode crossover (DESIGN.md
+    #: section 3a): d <= gram_max_d selects gram mode.  None defers to the
+    #: process default (``REPRO_GRAM_MAX_D`` env var, else the CPU-measured
+    #: constant in core/subproblem.py).  Forcing carry below the default
+    #: crossover leaves the cross-engine bit-parity contract.
+    gram_max_d: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -118,6 +124,7 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
               budget_fn: Optional[Callable[[Array, Array, int], Array]] = None,
               engine: Optional[RoundEngine] = None,
               trace: Optional[SystemsTrace] = None,
+              state0: Optional[DualState] = None,
               ) -> RunResult:
     """Run Algorithm 1 on the configured round engine.
 
@@ -125,7 +132,10 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
     BudgetConfig sampler (used by benchmark harnesses).  ``engine`` overrides
     ``cfg.engine`` (accepts a name, class, or configured instance);
     ``trace`` supplies a pre-built SystemsTrace (otherwise one is derived
-    from ``cfg.systems`` / ``cfg.network``).
+    from ``cfg.systems`` / ``cfg.network``).  ``state0`` warm-starts the dual
+    iterate (cross-device cohort blocks resume cached client state); the
+    caller must keep ``v = X alpha`` consistent -- ``dual.compute_v``
+    reconstructs it.
 
     ``cfg.driver`` selects the execution strategy: ``auto`` uses the
     device-resident scanned driver whenever the engine supports it
@@ -152,7 +162,11 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
                                    m)
 
     max_steps = cfg.budget.max_steps(data.n_max)
-    state = eng.setup(data, loss, max_steps)
+    from repro.core.subproblem import resolve_gram
+    gram = resolve_gram(data.d, cfg.gram_max_d)
+    state = eng.setup(data, loss, max_steps, gram=gram)
+    if state0 is not None:
+        state = state0
     if trace is None:
         sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
         trace = SystemsTrace(m, data.d, sys_cfg)
@@ -160,11 +174,11 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
     run = (_run_scanned if cfg.driver != "loop" and eng.supports_scan
            else _run_loop)
     return run(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
-               max_steps, budget_fn)
+               max_steps, budget_fn, gram)
 
 
 def _run_loop(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
-              max_steps, budget_fn) -> RunResult:
+              max_steps, budget_fn, gram=None) -> RunResult:
     """Python round loop: one engine dispatch + one host sync per round."""
     m = data.m
     key = jax.random.PRNGKey(cfg.seed)
@@ -214,9 +228,9 @@ def _run_loop(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
                      round_budgets=np.stack(budgets_log))
 
 
-@partial(jax.jit, static_argnums=(0, 1, 2))
-def _scan_rounds(round_fn, loss, max_steps, data, state, K, abar, q_t, gamma,
-                 keys, budgets, recs):
+@partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _scan_rounds(round_fn, loss, max_steps, gram, data, state, K, abar, q_t,
+                 gamma, keys, budgets, recs):
     """One device-resident segment of W-rounds (constant Omega/K).
 
     Scans the engine's pure round function (``RoundEngine.scan_round_fn``, a
@@ -229,7 +243,8 @@ def _scan_rounds(round_fn, loss, max_steps, data, state, K, abar, q_t, gamma,
 
     def body(st, xs):
         k_round, b, rec = xs
-        st = round_fn(loss, max_steps, data, st, K, q_t, b, gamma, k_round)
+        st = round_fn(loss, max_steps, gram, data, st, K, q_t, b, gamma,
+                      k_round)
         row = jax.lax.cond(
             rec,
             lambda s: jnp.stack(_metrics_impl(loss, data, s, abar, K)),
@@ -241,7 +256,7 @@ def _scan_rounds(round_fn, loss, max_steps, data, state, K, abar, q_t, gamma,
 
 
 def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
-                 max_steps, budget_fn) -> RunResult:
+                 max_steps, budget_fn, gram=None) -> RunResult:
     """Device-resident driver: the W-round loop runs inside ``lax.scan``.
 
     Budgets (and semi_sync deadline caps) are round-indexed, so the whole
@@ -279,8 +294,8 @@ def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
         tail_update = bool(every) and h_end % every == 0
         if tail_update and recs[-1]:
             recs[-1] = False  # metrics for an Omega round use the POST-update K
-        state, rows = _scan_rounds(round_fn, loss, max_steps, data, state, K,
-                                   abar, q_t, cfg.gamma,
+        state, rows = _scan_rounds(round_fn, loss, max_steps, gram, data,
+                                   state, K, abar, q_t, cfg.gamma,
                                    round_keys[h0:h_end],
                                    budgets_all[h0:h_end], jnp.asarray(recs))
         seg_slices.append((h0, h_end, recs, rows))

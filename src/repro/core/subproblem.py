@@ -43,6 +43,7 @@ bit-identical under it (tests/test_runtime.py).
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
@@ -81,8 +82,32 @@ _CARRY_WIDE_D = 512
 #: static feature-count crossover for the default residual mode: the Gram
 #: path trades the per-step O(d) reduction for C*d GEMM FLOPs per step,
 #: which pays off when d is small relative to the sequential-step cost
-#: (and on MXU-class hardware generally; measured on CPU in BENCH_sdca)
+#: (and on MXU-class hardware generally; measured on CPU in BENCH_sdca).
+#: This is the CPU-measured default; ``REPRO_GRAM_MAX_D`` (env var) or
+#: ``MochaConfig.gram_max_d`` override it for TPU re-tuning.
 _GRAM_MAX_D = 128
+
+
+def active_gram_max_d() -> int:
+    """The residual-mode crossover in effect: ``REPRO_GRAM_MAX_D`` when set,
+    else the CPU-measured module default.
+
+    Read per call so benchmarks/tests can override it, but the value feeds
+    STATIC solver plans inside jitted programs: set the env var before the
+    first solve of a shape -- changing it mid-process will not retrace
+    already-compiled programs.  ``BENCH_sdca.json`` rows record the active
+    value so re-tuned runs are distinguishable."""
+    return int(os.environ.get("REPRO_GRAM_MAX_D", _GRAM_MAX_D))
+
+
+def resolve_gram(d: int, gram_max_d: Optional[int]) -> Optional[bool]:
+    """Turn a per-run crossover override into the existing ``gram`` knob.
+
+    ``None`` (no override) keeps the shared ``_solver_plan`` default;
+    otherwise the returned bool is threaded through the engines exactly like
+    a forced mode.  NOTE: forcing carry below the default crossover leaves
+    the cross-engine bit-parity contract (see ``_carry_g``)."""
+    return None if gram_max_d is None else d <= int(gram_max_d)
 
 
 def _solver_plan(d: int, max_steps: int,
@@ -92,10 +117,11 @@ def _solver_plan(d: int, max_steps: int,
     A pure function of the static problem shape so the jnp solvers, the
     Pallas kernel, and the sharded runtime all agree without plumbing a
     config knob through the engine contract.  ``gram`` overrides the default
-    rule (benchmarks / tests exercise both modes at every shape).
+    rule (benchmarks / tests exercise both modes at every shape;
+    ``MochaConfig.gram_max_d`` resolves to it via ``resolve_gram``).
     """
     if gram is None:
-        gram = d <= _GRAM_MAX_D
+        gram = d <= active_gram_max_d()
     if gram:
         C = _GRAM_CHUNK
     else:

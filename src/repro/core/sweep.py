@@ -115,10 +115,13 @@ def _sweep_exec(cfg: MochaConfig, template: Regularizer,
     """
     from repro.core.engine import _local_round
 
+    from repro.core.subproblem import resolve_gram
+
     loss = get_loss(cfg.loss)
     m, n_max = data.X.shape[1], data.X.shape[2]
     max_steps = cfg.budget.max_steps(n_max)
     rounds, every = cfg.rounds, cfg.omega_update_every
+    gram = resolve_gram(data.X.shape[3], cfg.gram_max_d)
 
     def driver(d, pvals, key):
         d = dual_mod.with_xnorm2(d)   # per-cell hoist of the static SDCA
@@ -142,7 +145,7 @@ def _sweep_exec(cfg: MochaConfig, template: Regularizer,
         def body(carry, xs):
             state, omega, abar, K, q_t = carry
             h, k_round, b = xs
-            state = _local_round(loss, max_steps, d, state, K, q_t, b,
+            state = _local_round(loss, max_steps, gram, d, state, K, q_t, b,
                                  cfg.gamma, k_round)
             carry = (state, omega, abar, K, q_t)
             if every:   # pred is round-indexed (unbatched), so cond stays lazy

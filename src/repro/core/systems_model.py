@@ -95,6 +95,31 @@ def round_time_clock_cycle(step_counts: np.ndarray, d: int, network: Network,
 
 POLICIES = ("sync", "semi_sync")
 
+#: domain-separation tag for the population-rates stream: a SystemsTrace
+#: seeded with the same cfg.seed must NOT share raw draws with the
+#: availability weights (entangled streams would couple which clients get
+#: sampled to which slots straggle)
+_RATES_STREAM = 0x726174   # "rat"
+
+
+def population_rates(m: int, cfg: "SystemsConfig",
+                     seed: Optional[int] = None) -> np.ndarray:
+    """Per-client static clock-rate multipliers for an m-client population.
+
+    The same U[rate_lo, rate_hi] device-heterogeneity law ``SystemsTrace``
+    draws per node, but as bare multipliers (no ``clock_flops`` factor) and
+    for populations far larger than any single trace: the cross-device
+    cohort subsystem samples availability weights from these and injects the
+    sampled clients' rates into a cohort-slot trace via
+    ``SystemsTrace.set_rate_scale``.  O(m) memory -- the only per-client
+    hardware state the population carries.  Drawn on a domain-separated
+    stream so a trace built from the same ``cfg.seed`` shares no raw draws
+    with these weights.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence(
+        [_RATES_STREAM, cfg.seed if seed is None else seed]))
+    return rng.uniform(cfg.rate_lo, cfg.rate_hi, m)
+
 
 @dataclasses.dataclass(frozen=True)
 class SystemsConfig:
@@ -186,8 +211,31 @@ class SystemsTrace:
         self._round_rates: Optional[np.ndarray] = None
         self._round_comm: Optional[np.ndarray] = None
         self._cap: Optional[np.ndarray] = None
+        self._rate_scale: Optional[np.ndarray] = None
 
     # -- per-round protocol -------------------------------------------------
+
+    def set_rate_scale(self, scale: Optional[np.ndarray]) -> None:
+        """Install per-slot clock-rate multipliers applied from the next
+        ``begin_round`` until changed (``None`` clears them).
+
+        Cross-device cohorts re-bind each trace slot to a different sampled
+        client every block; the cohort driver injects that client's hardware
+        rate here (``population_rates``) so the simulated clock charges the
+        *client's* compute rate, not a static per-slot one.  Mid-round calls
+        are rejected: the scale must be stable across a
+        ``begin_round``/``commit`` pair (and across a scanned segment's
+        ``presample_caps`` + ``replay``, which reuse ``begin_round``)."""
+        if self._round_rates is not None:
+            raise RuntimeError("set_rate_scale called mid-round")
+        if scale is not None:
+            scale = np.asarray(scale, np.float64)
+            if scale.shape != (self.m,):
+                raise ValueError(
+                    f"rate_scale shape {scale.shape} != ({self.m},)")
+            if np.any(scale <= 0.0):
+                raise ValueError("rate_scale must be positive")
+        self._rate_scale = scale
 
     def begin_round(self) -> Optional[np.ndarray]:
         """Draw this round's systems state.
@@ -199,8 +247,9 @@ class SystemsTrace:
             raise RuntimeError("begin_round called twice without commit")
         cfg = self.cfg
         slow = self._rng.random(self.m) < cfg.straggler_prob
-        self._round_rates = self.rates / np.where(slow, cfg.straggler_mult,
-                                                  1.0)
+        rates = (self.rates if self._rate_scale is None
+                 else self.rates * self._rate_scale)
+        self._round_rates = rates / np.where(slow, cfg.straggler_mult, 1.0)
         lat = self.network.latency_s * (
             1.0 + cfg.comm_jitter * self._rng.random(self.m))
         self._round_comm = lat + self.msg_bytes / self.network.bandwidth_Bps

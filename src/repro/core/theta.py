@@ -98,6 +98,26 @@ def presample_budgets(cfg: BudgetConfig, budget_keys: Array,
     return jax.vmap(lambda k: round_budgets(cfg, k, n_t))(budget_keys)
 
 
+def drop_masked_budgets(cfg: BudgetConfig, dropped) -> callable:
+    """``budget_fn`` applying a PRE-SAMPLED (rounds, m) drop mask on top of
+    the BudgetConfig sampler.
+
+    Cross-device cohorts pre-sample per-(client, round) failures with the
+    cohort schedule (repro.cohort.sampler) instead of drawing them from the
+    in-round key chain: a dropped slot's budget is forced to 0 -- exactly
+    the paper's H_t -> 0 dropped node (theta_t^h = 1) -- while the
+    surviving slots keep the BudgetConfig draw, so the budget stream stays
+    round-indexed and scanned-driver compatible.
+    """
+    dropped = jnp.asarray(dropped, bool)
+
+    def budget_fn(key: Array, n_t: Array, h: int) -> Array:
+        budgets = round_budgets(cfg, key, n_t)
+        return jnp.where(dropped[h], 0, budgets)
+
+    return budget_fn
+
+
 def validate_assumption2(cfg: BudgetConfig) -> None:
     """Assumption 2: p_max < 1 (every node sends with non-zero probability)."""
     if cfg.drop_prob >= 1.0:

@@ -57,12 +57,49 @@ SPECS = {s.name: s for s in (
     HUMAN_ACTIVITY, GOOGLE_GLASS, VEHICLE_SENSOR, HA_SKEW, GG_SKEW, VS_SKEW)}
 
 
+def sample_client_size(rng: np.random.Generator, spec: FederationSpec) -> int:
+    """Draw ONE client's local size n_t -- the scalar form of ``_sizes``.
+
+    The streaming cross-device population draws sizes per client from its
+    counter-based RNG, so it needs the law one draw at a time; keep the two
+    functions in lockstep (they sit adjacent on purpose -- ``_sizes`` stays
+    vectorized because ``make_federation``'s RNG stream must not change).
+    """
+    if spec.skewed:
+        lo, hi = np.log(spec.n_min), np.log(spec.n_max)
+        return max(int(np.exp(rng.uniform(lo, hi))), 1)
+    return max(int(rng.integers(spec.n_min, spec.n_max + 1)), 1)
+
+
 def _sizes(rng: np.random.Generator, spec: FederationSpec) -> np.ndarray:
+    # the (m,) vectorized form of sample_client_size -- same law, one batched
+    # draw (do NOT rewrite as m scalar draws: the federation stream is pinned)
     if spec.skewed:
         # log-uniform between n_min and n_max: sizes span orders of magnitude
         lo, hi = np.log(spec.n_min), np.log(spec.n_max)
         return np.exp(rng.uniform(lo, hi, spec.m)).astype(int)
     return rng.integers(spec.n_min, spec.n_max + 1, spec.m)
+
+
+def sample_client_block(rng: np.random.Generator, spec: FederationSpec,
+                        w_true: np.ndarray, mu: np.ndarray,
+                        feat_scale: np.ndarray,
+                        n: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw ONE client's (X, y) block from its latent parameters.
+
+    The single sampling law shared by ``make_federation`` (which drives it
+    from one sequential federation RNG) and the streaming cross-device
+    population (``repro.cohort.population``, which drives it from a
+    per-client counter-based RNG so any client is re-materializable without
+    storing the population).  Keeps the federation RNG stream unchanged:
+    exactly the draws the old inline loop made, in the same order.
+    """
+    xt = mu + (rng.normal(0.0, 1.0, (n, spec.d)) * feat_scale) / np.sqrt(spec.d)
+    margin = xt @ w_true
+    yt = np.sign(margin + 1e-12)
+    flip = rng.random(n) < spec.label_noise
+    yt[flip] = -yt[flip]
+    return xt, yt
 
 
 def make_federation(spec: FederationSpec, seed: int = 0, train_frac: float = 0.75,
@@ -97,12 +134,8 @@ def make_federation(spec: FederationSpec, seed: int = 0, train_frac: float = 0.7
             n = int(split_sizes[t])
             if n == 0:
                 continue
-            xt = mu[t] + (rng.normal(0.0, 1.0, (n, spec.d))
-                          * feat_scale[t]) / np.sqrt(spec.d)
-            margin = xt @ W_true[t]
-            yt = np.sign(margin + 1e-12)
-            flip = rng.random(n) < spec.label_noise
-            yt[flip] = -yt[flip]
+            xt, yt = sample_client_block(rng, spec, W_true[t], mu[t],
+                                         feat_scale[t], n)
             X[t, :n] = xt
             y[t, :n] = yt
             mask[t, :n] = 1.0

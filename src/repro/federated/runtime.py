@@ -19,7 +19,11 @@ from __future__ import annotations
 
 import inspect
 from functools import partial
-from typing import Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
+
+if TYPE_CHECKING:   # circular at runtime (core.mocha drives this module)
+    from repro.core.mocha import MochaConfig, RunResult
+    from repro.core.regularizers import Regularizer
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +65,8 @@ def make_federated_mesh(n_shards: int | None = None) -> Mesh:
 def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
                       data: FederatedData, alpha: Array, v: Array,
                       K: Array, q_t: Array, budgets: Array, gamma: float,
-                      keys: Array, comm_dtype=None) -> Tuple[Array, Array]:
+                      keys: Array, comm_dtype=None,
+                      gram=None) -> Tuple[Array, Array]:
     """One federated W-round, tasks sharded over mesh axis ``data``.
 
     Args:
@@ -72,6 +77,8 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
         bf16 halves the round's only communicated tensor; the replicated v
         accumulator stays f32 so quantization error does not compound --
         validated in tests/test_runtime.py).
+      gram: residual-mode override (``MochaConfig.gram_max_d`` resolved by
+        the driver); None keeps the shared ``_solver_plan`` default.
     Returns (alpha', v') with the same shardings.
     """
     task_sharded = P("data")
@@ -87,7 +94,7 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
         W_sh = 0.5 * K_rows @ v_full
         dalpha, u = batched_local_sdca(
             loss, X_sh, y_sh, mask_sh, alpha_sh, W_sh, q_sh, budgets_sh,
-            keys_sh, max_steps, xnorm2=xn_sh)
+            keys_sh, max_steps, xnorm2=xn_sh, gram=gram)
         # THE federated communication: exchange Delta v blocks
         wire = u if comm_dtype is None else u.astype(comm_dtype)
         du_full = jax.lax.all_gather(wire, "data", tiled=True)
@@ -106,6 +113,24 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
     )
     return fn(data.X, data.y, data.mask, xnorm2, alpha, v, K, q_t, budgets,
               keys)
+
+
+def run_mocha_distributed(data: FederatedData, reg: "Regularizer",
+                          cfg: "MochaConfig", mesh: Optional[Mesh] = None,
+                          comm_dtype=None) -> "RunResult":
+    """``run_mocha`` on the shard_map runtime (tasks sharded over the mesh).
+
+    Back-compat entry point (formerly ``repro.federated.simulator``): the
+    Algorithm-1 loop lives in ONE place -- ``repro.core.mocha.run_mocha`` --
+    parameterized by a ``RoundEngine``; this wrapper keeps the historical
+    call signature on top of its ``ShardedEngine`` backend and, because the
+    unified driver owns the history schema, emits exactly the same keys as
+    every other engine.
+    """
+    from repro.core.engine import ShardedEngine
+    from repro.core.mocha import run_mocha
+    return run_mocha(data, reg, cfg,
+                     engine=ShardedEngine(mesh=mesh, comm_dtype=comm_dtype))
 
 
 def lower_federated_round(mesh: Mesh, loss: Loss, max_steps: int,

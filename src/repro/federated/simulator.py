@@ -1,27 +1,19 @@
-"""Distributed MOCHA driver: back-compat entry point.
+"""Deprecated alias module: the distributed driver lives in
+``repro.federated.runtime``.
 
-The Algorithm-1 loop now lives in ONE place -- ``repro.core.mocha.run_mocha``
--- parameterized by a ``RoundEngine``; the shard_map runtime is its
-``ShardedEngine`` backend.  This wrapper keeps the historical call signature
-and, because the unified driver owns the history schema, emits exactly the
-same keys as every other engine (including ``round_max_steps``, which the old
-fork silently dropped).
+This module was a 27-line wrapper around ``run_mocha`` that only re-exported
+``run_mocha_distributed``; the function now lives next to the shard_map
+runtime it drives.  Importing from here keeps working (with a
+DeprecationWarning) so historical call sites do not break --
+tests/test_runtime.py pins the alias.
 """
 from __future__ import annotations
 
-from typing import Optional
+import warnings
 
-from jax.sharding import Mesh
+from repro.federated.runtime import run_mocha_distributed  # noqa: F401
 
-from repro.core.dual import FederatedData
-from repro.core.engine import ShardedEngine
-from repro.core.mocha import MochaConfig, RunResult, run_mocha
-from repro.core.regularizers import Regularizer
-
-
-def run_mocha_distributed(data: FederatedData, reg: Regularizer,
-                          cfg: MochaConfig, mesh: Optional[Mesh] = None,
-                          comm_dtype=None) -> RunResult:
-    """``run_mocha`` on the shard_map runtime (tasks sharded over the mesh)."""
-    return run_mocha(data, reg, cfg,
-                     engine=ShardedEngine(mesh=mesh, comm_dtype=comm_dtype))
+warnings.warn(
+    "repro.federated.simulator is deprecated; import run_mocha_distributed "
+    "from repro.federated.runtime instead.",
+    DeprecationWarning, stacklevel=2)

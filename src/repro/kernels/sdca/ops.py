@@ -23,12 +23,16 @@ def draw_coordinates(keys, n_t, n, max_steps):
 
 
 def kernel_local_sdca(data, alpha, W, q_t, budgets, keys, max_steps,
-                      interpret=None):
-    """Mirror of repro.core.subproblem.batched_local_sdca (hinge only)."""
+                      interpret=None, gram=None):
+    """Mirror of repro.core.subproblem.batched_local_sdca (hinge only).
+
+    ``gram`` is the residual-mode override (``MochaConfig.gram_max_d``
+    resolved by the driver); ``None`` keeps the shared ``_solver_plan``
+    default."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n_t = jnp.sum(data.mask, axis=1)
     idx = draw_coordinates(keys, n_t, data.n_max, max_steps)
     return sdca_local_solve(data.X, data.y, data.mask, alpha, W, q_t,
                             budgets, idx, max_steps, interpret=interpret,
-                            xnorm2=data.xnorm2)
+                            gram=gram, xnorm2=data.xnorm2)

@@ -13,9 +13,9 @@ from repro.core import (HISTORY_KEYS, BudgetConfig, MeanRegularized,
                         get_loss, run_mocha, sigma_prime)
 from repro.core.systems_model import SystemsConfig
 from repro.data.synthetic import tiny_problem
-from repro.federated.runtime import distributed_round, make_federated_mesh
+from repro.federated.runtime import (distributed_round, make_federated_mesh,
+                                     run_mocha_distributed)
 from repro.federated.sharding import pad_task_matrix, pad_tasks, pad_vector
-from repro.federated.simulator import run_mocha_distributed
 
 REG = MeanRegularized(0.5, 0.5)
 
@@ -283,6 +283,39 @@ def test_distributed_matches_serial_driver():
     # identical problem, same convergence target; allow solver-path noise
     np.testing.assert_allclose(dist.final("primal"), serial.final("primal"),
                                rtol=1e-2)
+
+
+def test_simulator_alias_import_compatible():
+    """The folded-away repro.federated.simulator module must stay
+    import-compatible: same callable, DeprecationWarning on import."""
+    import importlib
+    import warnings
+
+    import repro.federated.simulator as sim
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sim = importlib.reload(sim)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert sim.run_mocha_distributed is run_mocha_distributed
+
+
+def test_mocha_config_gram_max_d_threads_to_engines():
+    """cfg.gram_max_d resolves to the engines' gram override: forcing gram
+    mode above the default crossover stays bit-identical across engines
+    (the gram GEMM primitives are the context-stable ones)."""
+    from repro.core.subproblem import _GRAM_MAX_D
+    train, _ = tiny_problem(m=3, n=18, d=160, seed=2)
+    assert train.d > _GRAM_MAX_D
+    cfg = MochaConfig(loss="hinge", rounds=6, record_every=3, seed=7,
+                      gram_max_d=256)
+    runs = {e: run_mocha(train, REG, cfg, engine=e) for e in ENGINES}
+    for other in ("pallas", "sharded"):
+        _assert_runs_bit_identical(runs["local"], runs[other])
+    # the override changed the plan: default-crossover runs differ from the
+    # forced-gram runs in association, so trajectories must NOT be bitwise
+    # equal (they converge to the same optimum; only the mode flipped)
+    default = run_mocha(train, REG, dataclasses.replace(cfg, gram_max_d=None))
+    assert not np.array_equal(default.W, runs["local"].W)
 
 
 def test_lowered_round_contains_all_gather():

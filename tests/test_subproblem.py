@@ -273,3 +273,22 @@ def test_convergence_equivalent_to_v1_arithmetic(loss_name, gram):
                                rtol=1e-3, atol=2e-4)
     np.testing.assert_allclose(np.asarray(u_v2), np.asarray(u_v1),
                                rtol=1e-3, atol=2e-4)
+
+
+def test_gram_crossover_env_override(monkeypatch):
+    """REPRO_GRAM_MAX_D re-tunes the static residual-mode crossover (the
+    TPU re-tuning knob); resolve_gram turns MochaConfig.gram_max_d into the
+    engines' forced-mode override."""
+    from repro.core.subproblem import (_GRAM_MAX_D, _solver_plan,
+                                       active_gram_max_d, resolve_gram)
+    monkeypatch.delenv("REPRO_GRAM_MAX_D", raising=False)
+    assert active_gram_max_d() == _GRAM_MAX_D
+    assert _solver_plan(100, 256)[0] is True      # d=100 <= 128 -> gram
+    monkeypatch.setenv("REPRO_GRAM_MAX_D", "64")
+    assert active_gram_max_d() == 64
+    assert _solver_plan(100, 256)[0] is False     # d=100 > 64 -> carry
+    assert _solver_plan(100, 256, gram=True)[0] is True   # explicit wins
+    # config-field resolution: None defers, an int forces the comparison
+    assert resolve_gram(100, None) is None
+    assert resolve_gram(100, 200) is True
+    assert resolve_gram(100, 64) is False
