@@ -19,8 +19,8 @@ import dataclasses
 import time
 from typing import Dict, List
 
-from repro.cohort import (CohortConfig, Population, PopulationSpec,
-                          run_mocha_cohort)
+import repro.api as api
+from repro.cohort import Population, PopulationSpec
 from repro.core import BudgetConfig, Probabilistic, SystemsConfig
 
 #: heterogeneous hardware (4x clock-rate spread): without it the default
@@ -44,19 +44,22 @@ ROUNDS = 8
 def _one(m: int, K: int, rounds: int = ROUNDS) -> Dict:
     spec = dataclasses.replace(BASE, name=f"cohort_bench_{m}", m=m)
     pop = Population(spec, seed=0)
-    cfg = CohortConfig(rounds=rounds, cohort=K, clusters=spec.clusters,
-                       sampler="weighted", dropout=0.1, systems=SYSTEMS,
-                       budget=BudgetConfig(passes=1.0),
-                       record_every=rounds, seed=0)
     reg = Probabilistic(lam=1e-2, sigma2=10.0)
+    exp = api.Experiment(
+        problem=api.Problem(population=pop),
+        method=api.Method(loss="hinge", regularizers=(reg,), rounds=rounds,
+                          budget=BudgetConfig(passes=1.0)),
+        systems=api.Systems(config=SYSTEMS, sampler="weighted", dropout=0.1),
+        exec=api.Exec(cohort=K, clusters=spec.clusters),
+        eval=api.Eval(record_every=rounds))
 
     t0 = time.perf_counter()
-    res = run_mocha_cohort(pop, reg, cfg)
+    report = exp.run(seed=0)
     cold_s = time.perf_counter() - t0
 
     # steady state: the inner scanned program and the packers are warm
     t0 = time.perf_counter()
-    res = run_mocha_cohort(pop, reg, cfg)
+    report = exp.run(seed=0)
     warm_s = time.perf_counter() - t0
 
     per_round_s = warm_s / rounds
@@ -66,9 +69,10 @@ def _one(m: int, K: int, rounds: int = ROUNDS) -> Dict:
         "clients_per_s": K * rounds / warm_s,
         "rounds_per_s": rounds / warm_s,
         "cold_wall_s": cold_s, "warm_wall_s": warm_s,
-        "unique_clients": int(res.final("unique_clients")),
-        "state_bytes": int(res.relationship.memory_bytes()),
+        "unique_clients": int(report.final("unique_clients")),
+        "state_bytes": int(report.result.relationship.memory_bytes()),
         "population_resident_bytes": int(pop.resident_bytes),
+        "provenance": report.provenance,
     }
 
 

@@ -9,10 +9,11 @@ from typing import Dict, List, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+import repro.api as api
+from repro.api.compat import experiment_from_mocha
 from repro.core import (BudgetConfig, MeanRegularized, MiniBatchConfig,
-                        MochaConfig, Probabilistic, per_task_error, run_cocoa,
-                        run_mb_sdca, run_mb_sgd, run_mocha, run_sweep,
-                        stack_federations, sweep_errors)
+                        MochaConfig, Probabilistic, per_task_error,
+                        run_mb_sdca, run_mb_sgd, stack_federations)
 from repro.core import systems_model
 from repro.data import synthetic as syn
 
@@ -60,28 +61,55 @@ def _kind_split(kind: str, train, test):
     return train, test
 
 
+def run_single(train, reg, cfg: MochaConfig, budget_fn=None,
+               trace=None) -> api.Report:
+    """One core-driver run through the experiment surface.
+
+    The benchmark-side bridge from a ``MochaConfig`` description to
+    ``repro.api`` (the legacy ``run_mocha`` shim would emit a
+    DeprecationWarning from first-party code -- the CI quickstart gate's
+    whole point)."""
+    exp = experiment_from_mocha(train, reg, cfg, budget_fn=budget_fn,
+                                trace=trace)
+    return exp.run(cfg.seed)
+
+
+def _grid_experiment(train_s, regs, cfg: MochaConfig,
+                     test_s) -> api.Experiment:
+    """(shuffle x lambda) grid + held-out eval as ONE experiment spec."""
+    return api.Experiment(
+        problem=api.Problem(train=train_s),
+        method=api.Method(loss=cfg.loss, regularizers=tuple(regs),
+                          rounds=cfg.rounds,
+                          omega_update_every=cfg.omega_update_every,
+                          budget=cfg.budget),
+        eval=api.Eval(record_every=cfg.record_every, holdout=test_s))
+
+
 def fit_eval(kind: str, train, test, lam: float, rounds: int) -> float:
     """kind in {global, local, mtl}; returns average test error.
 
-    Single-cell convenience wrapper over the sweep harness; grids should call
-    ``model_comparison`` (one batched dispatch per kind) instead.
+    Single-cell convenience wrapper over the experiment surface; grids
+    should call ``model_comparison`` (one batched dispatch per kind).
     """
     reg, cfg = _kind_setup(kind, lam, rounds)
     train, test = _kind_split(kind, train, test)
-    res = run_sweep(stack_federations([train]), [reg], cfg.seed, cfg)
-    return float(sweep_errors(res, stack_federations([test]))[0, 0])
+    report = _grid_experiment(stack_federations([train]), [reg], cfg,
+                              stack_federations([test])).run(cfg.seed)
+    return float(report.evaluation.grid[0, 0])
 
 
 def fit_eval_sequential(kind: str, train, test, lam: float,
                         rounds: int) -> float:
-    """The pre-sweep path: one Python-loop run_mocha per grid cell.
+    """The pre-sweep path: one Python-loop driver run per grid cell.
 
     Kept as the wall-clock baseline the sweep harness is measured against
     (BENCH_table1.json) and as an independent cross-check of sweep results.
     """
     reg, cfg = _kind_setup(kind, lam, rounds)
     train, test = _kind_split(kind, train, test)
-    res = run_mocha(train, reg, dataclasses.replace(cfg, driver="loop"))
+    res = run_single(train, reg,
+                     dataclasses.replace(cfg, driver="loop")).result
     return _error(train, test, res.W)
 
 
@@ -90,23 +118,29 @@ def model_comparison(spec, rounds: int = 60, shuffles: int = SHUFFLES,
                      ) -> Dict[str, Dict[str, float]]:
     """Table-1/4 protocol: best-lambda test error per model kind.
 
-    One vmapped sweep dispatch per model kind covers the whole
-    (shuffle x lambda) grid; per shuffle the best lambda is chosen by test
-    error, then mean/stderr aggregate over shuffles (EXPERIMENTS.md).
+    One experiment per model kind covers the whole (shuffle x lambda) grid
+    (the router batches it through the vmapped sweep); per shuffle the best
+    lambda is chosen by held-out error from the Report's eval table, then
+    mean/stderr aggregate over shuffles (EXPERIMENTS.md).  The returned dict
+    carries the last Report's provenance under ``"_provenance"`` so suite
+    rows can record the routed driver / resolved gram crossover.
     """
     feds = [syn.make_federation(spec, seed=seed) for seed in range(shuffles)]
     out: Dict[str, Dict[str, float]] = {}
+    provenance: Dict = {}
     for kind in ("global", "local", "mtl"):
         splits = [_kind_split(kind, tr, te) for tr, te in feds]
         train_s = stack_federations([tr for tr, _ in splits])
         test_s = stack_federations([te for _, te in splits])
         _, cfg = _kind_setup(kind, lambdas[0], rounds)
         regs = [_kind_setup(kind, lam, rounds)[0] for lam in lambdas]
-        res = run_sweep(train_s, regs, cfg.seed, cfg)
-        errs = sweep_errors(res, test_s)        # (lambda, shuffle)
+        report = _grid_experiment(train_s, regs, cfg, test_s).run(cfg.seed)
+        errs = report.evaluation.grid           # (lambda, shuffle)
         best = errs.min(axis=0)                 # best lambda per shuffle
         out[kind] = {"mean": float(best.mean()),
                      "stderr": float(best.std() / np.sqrt(len(best)))}
+        provenance = report.provenance
+    out["_provenance"] = provenance
     return out
 
 
@@ -129,7 +163,7 @@ def model_comparison_sequential(spec, rounds: int = 60,
 
 def primal_star(train, reg, rounds: int = 400) -> float:
     """High-accuracy optimum for suboptimality curves."""
-    res = run_mocha(train, reg, MochaConfig(
+    res = run_single(train, reg, MochaConfig(
         loss="hinge", rounds=rounds, budget=BudgetConfig(passes=3.0),
         record_every=rounds))
     return res.final("primal")
@@ -294,6 +328,7 @@ def run_method_trajectories(train, reg, rounds: int, seed: int = 0,
     n_t = np.asarray(train.n_t)
     trajs: Dict[str, list] = {"mocha": [], "cocoa": [], "mb_sgd": [],
                               "mb_sdca": []}
+    trajs["_provenance"] = {}
 
     for c in MOCHA_DEADLINES:
         cap = int(c * n_t.mean())
@@ -308,10 +343,12 @@ def run_method_trajectories(train, reg, rounds: int, seed: int = 0,
                 caps = jnp.maximum((caps * frac).astype(jnp.int32), 1)
             return caps
 
-        res = run_mocha(train, reg, MochaConfig(
+        report = run_single(train, reg, MochaConfig(
             loss="hinge", rounds=rounds * 3,
             budget=BudgetConfig(passes=16.0), seed=seed, record_every=1),
             budget_fn=budget_fn)
+        trajs["_provenance"] = report.provenance
+        res = report.result
         # clock cycle consistent with this variant's deadline: budgets were
         # drawn to fit cap steps, so semi_sync retiming never truncates
         cycle_s = (cap * systems_model.SDCA_STEP_FLOPS(train.d)
@@ -356,6 +393,8 @@ def best_times_for_network(trajs: Dict, d: int, network: str, p_star: float,
     """
     out = {}
     for name, variants in trajs.items():
+        if name == "_provenance":
+            continue
         best = float("inf")
         for v in variants:
             use_semi = policy == "semi_sync" and v["clock_cycle_s"] is not None

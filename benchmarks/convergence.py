@@ -5,13 +5,13 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import BudgetConfig, MeanRegularized, MochaConfig, run_mocha
+from repro.core import BudgetConfig, MeanRegularized, MochaConfig
 from repro.data.synthetic import tiny_problem
 
 
 def _rate(loss: str, rounds: int):
     train, _ = tiny_problem(m=6, n=40, d=10, seed=0)
-    res = run_mocha(train, MeanRegularized(0.5, 0.5), MochaConfig(
+    res = common.run_single(train, MeanRegularized(0.5, 0.5), MochaConfig(
         loss=loss, rounds=rounds, budget=BudgetConfig(passes=1.0),
         record_every=1))
     dual = np.asarray(res.history["dual"])
@@ -19,16 +19,17 @@ def _rate(loss: str, rounds: int):
     keep = sub > 1e-4
     sub = sub[keep][:30]
     if len(sub) < 5:
-        return float("-inf")
-    return float(np.polyfit(np.arange(len(sub)), np.log(sub), 1)[0])
+        return float("-inf"), res.provenance
+    slope = float(np.polyfit(np.arange(len(sub)), np.log(sub), 1)[0])
+    return slope, res.provenance
 
 
 def run(quick: bool = True):
     rounds = 60 if quick else 150
     rows = []
     for loss in ("smooth_hinge", "logistic", "hinge"):
-        slope, us = common.timed(_rate, loss, rounds)
+        (slope, prov), us = common.timed(_rate, loss, rounds)
         rows.append({"bench": "convergence", "loss": loss,
                      "log_decay_slope": slope, "us_per_call": us,
-                     "geometric": slope < -0.05})
+                     "geometric": slope < -0.05, "provenance": prov})
     return rows

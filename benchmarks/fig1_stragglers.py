@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from benchmarks import common
 from repro.core import (BudgetConfig, MeanRegularized, MochaConfig,
-                        SystemsConfig, run_mocha, systems_model)
+                        SystemsConfig, systems_model)
 from repro.data import synthetic as syn
 
 EPS = 1e-2
@@ -33,7 +33,7 @@ def semi_sync_end_to_end(train, reg, rounds: int, network: str,
     cycle_s = (common.MOCHA_DEADLINES[-1] * n_mean
                * systems_model.SDCA_STEP_FLOPS(train.d)
                / systems_model.CLOCK_FLOPS)
-    res = run_mocha(train, reg, MochaConfig(
+    res = common.run_single(train, reg, MochaConfig(
         loss="hinge", rounds=rounds * 3, budget=BudgetConfig(passes=16.0),
         systems=SystemsConfig(network=network, policy="semi_sync",
                               clock_cycle_s=cycle_s),
@@ -60,7 +60,8 @@ def run(quick: bool = True):
                                                   p_star, EPS, policy=policy)
             row = {"bench": "fig1", "network": network, "policy": policy,
                    "eps_rel": EPS, "us_per_call": us,
-                   "t_mocha_semi_sync_e2e": e2e}
+                   "t_mocha_semi_sync_e2e": e2e,
+                   "provenance": trajs.get("_provenance", {})}
             row.update({f"t_{m}": t for m, t in times.items()})
             row["mocha_fastest"] = times["mocha"] <= min(
                 times["cocoa"], times["mb_sgd"], times["mb_sdca"])

@@ -25,7 +25,8 @@ def run(quick: bool = True):
             times = common.best_times_for_network(trajs, train.d, "lte",
                                                   p_star, EPS, policy=policy)
             row = {"bench": "fig2", "variability": label, "policy": policy,
-                   "eps_rel": EPS, "us_per_call": us}
+                   "eps_rel": EPS, "us_per_call": us,
+                   "provenance": trajs.get("_provenance", {})}
             row.update({f"t_{m}": t for m, t in times.items()})
             row["mocha_fastest"] = times["mocha"] <= min(
                 times["cocoa"], times["mb_sgd"], times["mb_sdca"])

@@ -4,8 +4,7 @@ converges to the wrong solution (the paper's green dotted line)."""
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import (BudgetConfig, MeanRegularized, MochaConfig,
-                        run_mocha)
+from repro.core import (BudgetConfig, MeanRegularized, MochaConfig)
 from repro.data import synthetic as syn
 import warnings
 
@@ -14,19 +13,20 @@ def run(quick: bool = True):
     train, _ = syn.make_federation(syn.HUMAN_ACTIVITY, seed=0)
     reg = MeanRegularized(lambda1=0.1, lambda2=0.1)
     rounds = 120 if quick else 400
-    ref = run_mocha(train, reg, MochaConfig(
+    ref = common.run_single(train, reg, MochaConfig(
         loss="hinge", rounds=rounds, budget=BudgetConfig(passes=1.0),
         record_every=rounds))
     p_ref = ref.final("primal")
     rows = []
     for p in (0.0, 0.25, 0.5, 0.75, 0.9):
-        res, us = common.timed(run_mocha, train, reg, MochaConfig(
+        res, us = common.timed(common.run_single, train, reg, MochaConfig(
             loss="hinge", rounds=rounds,
             budget=BudgetConfig(passes=1.0, drop_prob=p),
             record_every=rounds))
         sim = res.trace.summary()
         rows.append({
             "bench": "fig3", "drop_prob": p, "us_per_call": us,
+            "provenance": res.provenance,
             "primal_gap_vs_ref": res.final("primal") - p_ref,
             "rel_gap": res.final("gap") / max(abs(res.final("primal")), 1.0),
             "converged": (res.final("gap")
@@ -37,7 +37,7 @@ def run(quick: bool = True):
     # p == 1 on one node: must NOT converge to the reference solution
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")
-        dead = run_mocha(train, reg, MochaConfig(
+        dead = common.run_single(train, reg, MochaConfig(
             loss="hinge", rounds=rounds,
             budget=BudgetConfig(passes=1.0, never_send_node=0),
             record_every=rounds))

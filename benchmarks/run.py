@@ -92,6 +92,15 @@ def main() -> None:
             failed.append(name)
             continue
         wall_s = time.perf_counter() - t0
+        # every BENCH row carries the shared provenance schema: rows that ran
+        # through the experiment router recorded their own block (routed
+        # driver, config hash); everything else gets the ambient one (the
+        # resolved gram crossover + backend), replacing per-suite ad-hoc
+        # plumbing of individual fields
+        from repro.api import base_provenance
+        ambient = base_provenance()
+        for row in rows:
+            row.setdefault("provenance", dict(ambient))
         out_path = json_dir / f"BENCH_{name}.json"
         with out_path.open("w") as fh:
             json.dump(_json_safe({"bench": name, "quick": quick,

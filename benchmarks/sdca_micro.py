@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import get_loss
-from repro.core.subproblem import (_solver_plan, active_gram_max_d,
+from repro.core.subproblem import (_solver_plan,
                                    local_sdca_idx, row_norms)
 from repro.utils.jax_compat import fp_barrier
 
@@ -240,10 +240,9 @@ def run(quick: bool = True) -> List[Dict]:
             row = {
                 "bench": "sdca", "shape": tag, "variant": variant,
                 "m": m, "n": n, "d": d, "steps": steps, "C": C,
-                # the crossover in effect (REPRO_GRAM_MAX_D-overridable):
-                # rows from a TPU-retuned run are distinguishable from the
-                # CPU-default ones
-                "gram_max_d": active_gram_max_d(),
+                # the crossover in effect (REPRO_GRAM_MAX_D-overridable) now
+                # rides in the shared provenance block benchmarks/run.py
+                # attaches to every row
                 "us_per_call": t * 1e6,
                 "us_per_step": t * 1e6 / steps,
                 "speedup_vs_v1": speedup,

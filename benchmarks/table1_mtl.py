@@ -25,11 +25,13 @@ def run(quick: bool = True):
     for spec in common.dataset_specs(skewed=False):
         res, cold_us = common.timed(common.model_comparison, spec, rounds,
                                     shuffles, lambdas)
+        prov = res.pop("_provenance", {})
         for kind in ("global", "local", "mtl"):
             rows.append({
                 "bench": "table1", "dataset": spec.name, "model": kind,
                 "err_mean": res[kind]["mean"], "err_stderr":
                 res[kind]["stderr"], "us_per_call": cold_us,
+                "provenance": prov,
             })
         # the paper's ordering: MTL < local and MTL < global
         rows.append({
@@ -38,8 +40,9 @@ def run(quick: bool = True):
             "mtl_beats_global": res["mtl"]["mean"] <= res["global"]["mean"],
         })
         if quick:
-            _, warm_us = common.timed(common.model_comparison, spec, rounds,
-                                      shuffles, lambdas)
+            warm_res, warm_us = common.timed(common.model_comparison, spec,
+                                             rounds, shuffles, lambdas)
+            warm_res.pop("_provenance", None)
             seq_res, seq_us = common.timed(
                 common.model_comparison_sequential, spec, rounds, shuffles,
                 lambdas)

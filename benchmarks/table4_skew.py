@@ -14,11 +14,13 @@ def run(quick: bool = True):
     for spec in common.dataset_specs(skewed=True):
         res, us = common.timed(common.model_comparison, spec, rounds,
                                shuffles, lambdas)
+        prov = res.pop("_provenance", {})
         for kind in ("global", "local", "mtl"):
             rows.append({
                 "bench": "table4", "dataset": spec.name, "model": kind,
                 "err_mean": res[kind]["mean"],
                 "err_stderr": res[kind]["stderr"], "us_per_call": us,
+                "provenance": prov,
             })
         rows.append({
             "bench": "table4", "dataset": spec.name, "model": "claim",

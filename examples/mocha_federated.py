@@ -1,24 +1,33 @@
 """End-to-end MOCHA study on one federation: MTL-vs-baselines, straggler
 robustness, fault tolerance, and the three round engines (vmap / Pallas /
-shard_map) driving the SAME Algorithm-1 loop.
+shard_map) driving the SAME experiment spec through the capability router.
 
     PYTHONPATH=src python examples/mocha_federated.py
 """
+import dataclasses
+
 import numpy as np
 
+from repro.api import Eval, Exec, Experiment, Method, Problem, Systems
 from repro.core import (BudgetConfig, MeanRegularized, MiniBatchConfig,
-                        MochaConfig, SystemsConfig, run_mb_sdca, run_mb_sgd,
-                        run_mocha, systems_model)
+                        MochaConfig, SystemsConfig, run_cocoa, run_mb_sdca,
+                        run_mb_sgd, systems_model)
 from repro.data.synthetic import VEHICLE_SENSOR, make_federation
 
 train, test = make_federation(VEHICLE_SENSOR, seed=0)
 reg = MeanRegularized(lambda1=0.1, lambda2=0.1)
 
+BASE = Experiment(
+    problem=Problem(train=train),
+    method=Method(loss="hinge", regularizers=reg, rounds=60,
+                  budget=BudgetConfig(passes=0.5)),
+    systems=Systems(network="lte"),
+    eval=Eval(record_every=59, holdout=test),
+)
+
 print("== methods, 60 rounds on simulated LTE ==")
-mocha = run_mocha(train, reg, MochaConfig(
-    loss="hinge", rounds=60, budget=BudgetConfig(passes=0.5),
-    network="lte", record_every=59))
-cocoa = run_mocha(train, reg, MochaConfig(
+mocha = BASE.run(seed=0)
+cocoa = run_cocoa(train, reg, MochaConfig(
     loss="hinge", rounds=60, budget=BudgetConfig(passes=1.0),
     per_task_sigma=False, network="lte", record_every=59))
 mb = MiniBatchConfig(loss="hinge", rounds=60, batch=16, lr=0.05,
@@ -28,34 +37,45 @@ for name, res in [("MOCHA", mocha), ("CoCoA", cocoa), ("Mb-SGD", sgd),
                   ("Mb-SDCA", sdca)]:
     print(f"  {name:8s} primal={res.final('primal'):10.2f}  "
           f"sim_time={res.final('time'):8.2f}s")
+print(f"  MOCHA held-out mean error: "
+      f"{mocha.evaluation.summary['mean_error']:.4f}")
 
 print("== straggler + drop robustness (MOCHA) ==")
 for label, budget in [
         ("clean", BudgetConfig(passes=1.0)),
         ("high-variance systems", BudgetConfig(passes=1.0, systems_lo=0.1)),
         ("25% drops", BudgetConfig(passes=1.0, drop_prob=0.25))]:
-    res = run_mocha(train, reg, MochaConfig(
-        loss="hinge", rounds=120, budget=budget, record_every=119))
-    print(f"  {label:24s} gap={res.final('gap'):9.4f}")
+    rep = dataclasses.replace(
+        BASE,
+        method=Method(loss="hinge", regularizers=reg, rounds=120,
+                      budget=budget),
+        eval=Eval(record_every=119)).run(seed=0)
+    print(f"  {label:24s} gap={rep.final('gap'):9.4f}")
 
-print("== one driver, three engines (bit-identical on a fixed seed) ==")
-eng_cfg = MochaConfig(loss="hinge", rounds=40,
-                      budget=BudgetConfig(passes=1.0), record_every=39)
-runs = {e: run_mocha(train, reg, eng_cfg, engine=e)
+print("== one spec, three engines (bit-identical on a fixed seed) ==")
+eng_exp = dataclasses.replace(
+    BASE, method=Method(loss="hinge", regularizers=reg, rounds=40,
+                        budget=BudgetConfig(passes=1.0)),
+    eval=Eval(record_every=39))
+runs = {e: dataclasses.replace(eng_exp, exec=Exec(engine=e)).run(seed=0)
         for e in ("local", "pallas", "sharded")}
 ref = runs["local"]
-for name, res in runs.items():
-    same = np.array_equal(res.W, ref.W)
-    print(f"  {name:8s} primal={res.final('primal'):10.2f} "
-          f"gap={res.final('gap'):.4f}  W == local: {same}")
+for name, rep in runs.items():
+    same = np.array_equal(rep.result.W, ref.result.W)
+    print(f"  {name:8s} primal={rep.final('primal'):10.2f} "
+          f"gap={rep.final('gap'):.4f}  W == local: {same}  "
+          f"(driver: {rep.provenance['driver']})")
 
 print("== semi_sync clock cycle: the trace caps budgets, not the straggler ==")
 cycle = 0.5 * float(np.mean(np.asarray(train.n_t))) \
     * systems_model.SDCA_STEP_FLOPS(train.d) / systems_model.CLOCK_FLOPS
-semi = run_mocha(train, reg, MochaConfig(
-    loss="hinge", rounds=60, budget=BudgetConfig(passes=1.0),
-    systems=SystemsConfig(policy="semi_sync", clock_cycle_s=cycle,
-                          rate_lo=0.25, rate_hi=1.0, straggler_prob=0.1),
-    record_every=59))
+semi = dataclasses.replace(
+    BASE,
+    method=Method(loss="hinge", regularizers=reg, rounds=60,
+                  budget=BudgetConfig(passes=1.0)),
+    systems=Systems(config=SystemsConfig(
+        policy="semi_sync", clock_cycle_s=cycle, rate_lo=0.25, rate_hi=1.0,
+        straggler_prob=0.1)),
+    eval=Eval(record_every=59)).run(seed=0)
 print(f"  semi_sync primal={semi.final('primal'):.2f} "
       f"sim_time={semi.final('time'):.2f}s  {semi.trace.summary()}")

@@ -1,12 +1,17 @@
 """Quickstart: federated multi-task learning with MOCHA in ~30 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One declarative surface (repro.api): describe the problem, method, systems
+environment, execution substrate, and evaluation -- the capability router
+picks the fastest applicable path and the Report carries history, held-out
+per-client metrics, and provenance.
 """
 import numpy as np
 
-from repro.core import (BudgetConfig, MochaConfig, Probabilistic,
-                        per_task_error, run_mocha)
-from repro.data.synthetic import make_federation, HUMAN_ACTIVITY
+from repro.api import Eval, Experiment, Method, Problem, Systems
+from repro.core import BudgetConfig, Probabilistic
+from repro.data.synthetic import HUMAN_ACTIVITY, make_federation
 
 # 1. a federation: 30 mobile-phone nodes, non-IID unbalanced local data
 train, test = make_federation(HUMAN_ACTIVITY, seed=0)
@@ -14,17 +19,27 @@ print(f"federation: m={train.m} nodes, d={train.d} features, "
       f"n_t in [{int(train.n_t.min())}, {int(train.n_t.max())}]")
 
 # 2. MOCHA: per-node SVMs + learned task relationships, straggler-tolerant
-reg = Probabilistic(lam=1e-2, sigma2=10.0)
-cfg = MochaConfig(
-    loss="hinge", rounds=80, omega_update_every=20,
-    budget=BudgetConfig(passes=1.0, systems_lo=0.5, drop_prob=0.1),
-    network="lte", record_every=10)
-result = run_mocha(train, reg, cfg)
+experiment = Experiment(
+    problem=Problem(train=train),
+    method=Method(
+        loss="hinge", regularizers=Probabilistic(lam=1e-2, sigma2=10.0),
+        rounds=80, omega_update_every=20,
+        budget=BudgetConfig(passes=1.0, systems_lo=0.5, drop_prob=0.1)),
+    systems=Systems(network="lte"),
+    eval=Eval(record_every=10, holdout=test),
+)
+report = experiment.run(seed=0)
 
-# 3. inspect
-err = per_task_error(train, result.W, test.X, test.y, test.mask)
-print(f"final duality gap: {result.final('gap'):.4f}")
-print(f"simulated federated wall-clock: {result.final('time'):.1f}s (LTE)")
-print(f"avg test error across tasks: {float(np.mean(np.asarray(err))):.4f}")
+# 3. inspect: history, per-client held-out eval, and provenance ride along
+result = report.result
+print(f"final duality gap: {report.final('gap'):.4f}")
+print(f"simulated federated wall-clock: {report.final('time'):.1f}s (LTE)")
+print(f"avg test error across tasks: "
+      f"{report.evaluation.summary['mean_error']:.4f}")
+print(f"worst client held-out error: "
+      f"{report.evaluation.per_client['error'].max():.4f}")
 print(f"learned Omega diag (task self-affinity): "
       f"{np.round(np.diagonal(result.omega)[:6], 3)}")
+print(f"executed as: {report.provenance['path']}/"
+      f"{report.provenance['driver']} on {report.provenance['engine']} "
+      f"(config {report.provenance['config_hash']})")

@@ -1,0 +1,51 @@
+"""The ONE deprecation path for the legacy entry points.
+
+``run_mocha`` / ``run_sweep`` / ``run_mocha_cohort`` /
+``run_mocha_distributed`` (and the ``repro.federated.simulator`` module
+alias) all funnel through ``warn_legacy`` -- one message template, one
+filter target -- and through ``experiment_from_mocha`` where they share the
+spec mapping, so shim behavior cannot drift per entry point.  Every shim is
+bit-parity-tested against ``Experiment.run`` in tests/test_api.py.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+_TEMPLATE = ("legacy entry point {old} is deprecated; compose a "
+             "repro.api.Experiment ({hint}) and call .run() instead")
+
+
+def warn_legacy(old: str, hint: str, stacklevel: int = 3) -> None:
+    """Emit the single shim-layer DeprecationWarning.
+
+    ``stacklevel=3`` points the warning at the CALLER of the legacy entry
+    point (caller -> shim -> here), which is what the CI quickstart gate
+    (tools/check_quickstart_warnings.py) keys on.
+    """
+    warnings.warn(_TEMPLATE.format(old=old, hint=hint), DeprecationWarning,
+                  stacklevel=stacklevel)
+
+
+def experiment_from_mocha(data, reg, cfg, omega0=None, budget_fn=None,
+                          engine=None, trace=None, state0=None,
+                          mesh=None, comm_dtype=None):
+    """Map a legacy ``run_mocha``-style call onto an ``Experiment``.
+
+    Shared by the ``run_mocha`` and ``run_mocha_distributed`` shims; the
+    override kwargs land in their spec homes (``omega0``/``budget_fn`` ->
+    Method, ``trace`` -> Systems, ``engine``/``state0``/mesh knobs -> Exec).
+    """
+    from repro.api.specs import (Eval, Exec, Experiment, Method, Problem,
+                                 Systems)
+    return Experiment(
+        problem=Problem(train=data),
+        method=Method(loss=cfg.loss, regularizers=(reg,), rounds=cfg.rounds,
+                      omega_update_every=cfg.omega_update_every,
+                      gamma=cfg.gamma, per_task_sigma=cfg.per_task_sigma,
+                      budget=cfg.budget, budget_fn=budget_fn, omega0=omega0),
+        systems=Systems(network=cfg.network, config=cfg.systems, trace=trace),
+        exec=Exec(engine=cfg.engine if engine is None else engine,
+                  driver=cfg.driver, gram_max_d=cfg.gram_max_d,
+                  mesh=mesh, comm_dtype=comm_dtype, state0=state0),
+        eval=Eval(record_every=cfg.record_every))

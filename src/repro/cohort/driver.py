@@ -39,19 +39,15 @@ from repro.cohort.population import Population
 from repro.cohort.sampler import CohortSampler, CohortSchedule
 from repro.core import dual as dual_mod
 from repro.core.dual import DualState
-from repro.core.mocha import HISTORY_KEYS, MochaConfig, _record_rounds, run_mocha
+from repro.core.mocha import (HISTORY_KEYS, MochaConfig, _record_rounds,
+                              _run_mocha)
 from repro.core.regularizers import Regularizer
 from repro.core.systems_model import (SystemsConfig, SystemsTrace,
                                       population_rates)
-from repro.core.theta import BudgetConfig, drop_masked_budgets
+from repro.core.theta import drop_masked_budgets
 
 #: domain-separation tag for per-block inner-driver seeds
 _BLOCK_STREAM = 0x626C6B   # "blk"
-
-#: MochaConfig fields CohortConfig mirrors verbatim -- THE one wiring point:
-#: a new shared knob needs a CohortConfig field plus one entry here
-_INNER_PASSTHROUGH = ("loss", "gamma", "per_task_sigma", "budget", "engine",
-                      "gram_max_d")
 
 #: the cohort history = the driver history + cross-device coverage
 COHORT_HISTORY_KEYS = HISTORY_KEYS + ("unique_clients",)
@@ -59,9 +55,17 @@ COHORT_HISTORY_KEYS = HISTORY_KEYS + ("unique_clients",)
 
 @dataclasses.dataclass(frozen=True)
 class CohortConfig:
-    """Cross-device run description (the outer layer over ``MochaConfig``)."""
+    """Cross-device run description: outer-loop knobs + an INNER MochaConfig.
 
-    loss: str = "hinge"
+    The inner per-block solver settings (loss, budgets, gamma, engine, gram
+    crossover, ...) are a plain ``MochaConfig`` view under ``inner`` -- no
+    mirrored field list to keep in sync (the old ``_INNER_PASSTHROUGH``
+    wiring point is gone); ``repro.api.as_cohort_config`` builds both layers
+    from one set of sub-specs.  ``inner.rounds`` / ``inner.record_every`` /
+    ``inner.omega_update_every`` / ``inner.seed`` are owned by the block
+    loop (``inner_config`` overrides them), everything else passes through.
+    """
+
     rounds: int = 100                  # cohort blocks (outer rounds)
     cohort: int = 64                   # K sampled clients per block
     inner_rounds: int = 1              # W-rounds run on each cohort
@@ -71,16 +75,20 @@ class CohortConfig:
     eta: float = 0.5                   # per-client self-affinity in Omega_S
     omega_update_every: int = 0        # blocks between cluster-Omega steps
     cache_clients: int = 4096          # bounded warm-start/delta cache
-    gamma: float = 1.0
-    per_task_sigma: bool = True
-    budget: BudgetConfig = dataclasses.field(default_factory=BudgetConfig)
-    engine: str = "local"              # shards the COHORT, not the population
     network: str = "lte"
     systems: Optional[SystemsConfig] = None
     seed: int = 0
     record_every: int = 1
     n_pad: Optional[int] = None        # None = PopulationSpec.pad_width
-    gram_max_d: Optional[int] = None   # threaded to MochaConfig
+    #: the per-block solver view; engine shards the COHORT, never the
+    #: population
+    inner: MochaConfig = dataclasses.field(default_factory=MochaConfig)
+
+    def inner_config(self) -> MochaConfig:
+        """The effective per-block driver config (seed set per block)."""
+        return dataclasses.replace(
+            self.inner, rounds=self.inner_rounds, omega_update_every=0,
+            record_every=self.inner_rounds)
 
 
 @dataclasses.dataclass
@@ -125,6 +133,36 @@ def _block_seed(seed: int, block: int) -> int:
 
 def run_mocha_cohort(pop: Population, reg: Regularizer,
                      cfg: CohortConfig) -> CohortRunResult:
+    """Deprecated shim: construct a ``repro.api.Experiment`` instead
+    (``Problem(population=...)`` + the cohort knobs on ``Exec``/``Systems``).
+
+    Bit-parity-tested against ``Experiment.run`` in tests/test_api.py.
+    """
+    from repro.api import Eval, Exec, Experiment, Method, Problem, Systems
+    from repro.api.compat import warn_legacy
+    warn_legacy("run_mocha_cohort()",
+                "Problem(population=...), Exec(cohort=..., clusters=...)")
+    exp = Experiment(
+        problem=Problem(population=pop),
+        method=Method(loss=cfg.inner.loss, regularizers=(reg,),
+                      rounds=cfg.rounds,
+                      omega_update_every=cfg.omega_update_every,
+                      gamma=cfg.inner.gamma,
+                      per_task_sigma=cfg.inner.per_task_sigma,
+                      budget=cfg.inner.budget),
+        systems=Systems(network=cfg.network, config=cfg.systems,
+                        sampler=cfg.sampler, dropout=cfg.dropout),
+        exec=Exec(engine=cfg.inner.engine, driver=cfg.inner.driver,
+                  gram_max_d=cfg.inner.gram_max_d, cohort=cfg.cohort,
+                  inner_rounds=cfg.inner_rounds, clusters=cfg.clusters,
+                  eta=cfg.eta, cache_clients=cfg.cache_clients,
+                  n_pad=cfg.n_pad),
+        eval=Eval(record_every=cfg.record_every))
+    return exp.run(cfg.seed).result
+
+
+def _run_cohort(pop: Population, reg: Regularizer,
+                cfg: CohortConfig) -> CohortRunResult:
     """Run cross-device MOCHA: ``cfg.rounds`` sampled-cohort blocks.
 
     ``reg`` plays its usual two roles, both in cohort/cluster space: its
@@ -153,10 +191,7 @@ def run_mocha_cohort(pop: Population, reg: Regularizer,
     slot_cfg = dataclasses.replace(sys_cfg, rate_lo=1.0, rate_hi=1.0)
     trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)
 
-    inner = MochaConfig(
-        rounds=cfg.inner_rounds, omega_update_every=0,
-        record_every=cfg.inner_rounds,
-        **{f: getattr(cfg, f) for f in _INNER_PASSTHROUGH})
+    inner = cfg.inner_config()
 
     record = _record_rounds(cfg.rounds, cfg.record_every)
     history: Dict[str, List[float]] = {k: [] for k in COHORT_HISTORY_KEYS}
@@ -171,11 +206,11 @@ def run_mocha_cohort(pop: Population, reg: Regularizer,
         alpha0 = jnp.asarray(state.cohort_alpha(ids, n_pad))
         warm = DualState(alpha=alpha0, v=dual_mod.compute_v(data, alpha0))
         trace.set_rate_scale(rate_mult[ids])
-        res = run_mocha(
+        res = _run_mocha(
             data, reg, dataclasses.replace(inner, seed=_block_seed(cfg.seed, b)),
             omega0=state.cohort_omega(ids),
             budget_fn=drop_masked_budgets(
-                cfg.budget, np.broadcast_to(dropped, (cfg.inner_rounds,
+                inner.budget, np.broadcast_to(dropped, (cfg.inner_rounds,
                                                       cfg.cohort))),
             trace=trace, state0=warm)
 

@@ -104,9 +104,22 @@ _metrics = partial(jax.jit, static_argnums=(0,))(_metrics_impl)
 
 
 def _record_rounds(rounds: int, record_every: int) -> np.ndarray:
+    """(rounds,) bool mask of history-record rounds.
+
+    Every ``record_every``-th round plus ALWAYS the final round, so the
+    history is never missing its last row -- including the ``rounds == 1``
+    and ``record_every > rounds`` degenerate cadences (regression-tested in
+    tests/test_mocha.py::test_history_degenerate_cadences).  Invalid
+    cadences fail loudly here instead of as numpy slice errors (or, for
+    ``rounds < 1``, a silent empty history) deep in a driver.
+    """
+    if rounds < 1:
+        raise ValueError(f"need rounds >= 1, got {rounds}")
+    if record_every < 1:
+        raise ValueError(f"need record_every >= 1, got {record_every}")
     rec = np.zeros(rounds, bool)
     rec[::record_every] = True
-    rec[rounds - 1] = True
+    rec[-1] = True
     return rec
 
 
@@ -126,7 +139,35 @@ def run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
               trace: Optional[SystemsTrace] = None,
               state0: Optional[DualState] = None,
               ) -> RunResult:
-    """Run Algorithm 1 on the configured round engine.
+    """Deprecated shim: construct a ``repro.api.Experiment`` instead.
+
+    Kept for back-compat (bit-parity-tested against ``Experiment.run`` in
+    tests/test_api.py); the override kwargs map onto the spec fields --
+    ``omega0``/``budget_fn`` -> ``Method``, ``trace`` -> ``Systems``,
+    ``engine``/``state0`` -> ``Exec``.
+    """
+    from repro.api.compat import experiment_from_mocha, warn_legacy
+    warn_legacy("run_mocha()",
+                "Problem(train=...), Method(...), Exec(engine=...)")
+    exp = experiment_from_mocha(data, reg, cfg, omega0=omega0,
+                                budget_fn=budget_fn, engine=engine,
+                                trace=trace, state0=state0)
+    return exp.run(cfg.seed).result
+
+
+def _run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
+               omega0: Optional[Array] = None,
+               budget_fn: Optional[Callable[[Array, Array, int],
+                                            Array]] = None,
+               engine: Optional[RoundEngine] = None,
+               trace: Optional[SystemsTrace] = None,
+               state0: Optional[DualState] = None,
+               ) -> RunResult:
+    """Run Algorithm 1 on the configured round engine (the core driver).
+
+    This is the internal single-run implementation every execution path of
+    ``repro.api`` bottoms out in; user code enters through
+    ``repro.api.Experiment`` (or the deprecated ``run_mocha`` shim above).
 
     ``budget_fn(key, n_t, round) -> (m,) int budgets`` overrides the
     BudgetConfig sampler (used by benchmark harnesses).  ``engine`` overrides
@@ -357,4 +398,4 @@ def run_cocoa(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
                                       clock_cycle_s=0.0)
     cocoa_cfg = dataclasses.replace(cfg, budget=fixed, per_task_sigma=False,
                                     systems=systems)
-    return run_mocha(data, reg, cocoa_cfg, omega0=omega0)
+    return _run_mocha(data, reg, cocoa_cfg, omega0=omega0)

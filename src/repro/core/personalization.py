@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dual import FederatedData
-from repro.core.mocha import MochaConfig, RunResult, run_mocha
+from repro.core.mocha import MochaConfig, RunResult, _run_mocha
 from repro.core.regularizers import Regularizer
 from repro.models.transformer import Model
 
@@ -69,7 +69,7 @@ class PersonalizationBridge:
 
     def fit(self, fed: FederatedData,
             omega0: Optional[Array] = None) -> RunResult:
-        return run_mocha(fed, self.regularizer, self.mocha, omega0=omega0)
+        return _run_mocha(fed, self.regularizer, self.mocha, omega0=omega0)
 
     def predict(self, params, batch: Dict[str, Array], w_t: Array) -> Array:
         """Per-task margin for new examples of task t."""

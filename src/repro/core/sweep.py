@@ -83,6 +83,28 @@ def stack_federations(datas: Sequence[FederatedData]) -> FederatedData:
     )
 
 
+def grid_batch_reason(regs: Sequence[Regularizer]) -> Optional[str]:
+    """Why a regularizer grid cannot be batched (None = it can).
+
+    The non-raising twin of ``_grid_fields``'s validation, consumed by the
+    capability router (repro.api.router): grids that fail these checks fall
+    back to the sequential cell loop instead of erroring.
+    """
+    template = regs[0]
+    for r in regs:
+        if type(r) is not type(template):
+            return (f"mixed regularizer types ({type(template).__name__} vs "
+                    f"{type(r).__name__}) cannot become one traced template")
+    for f in dataclasses.fields(template):
+        vals = [getattr(r, f.name) for r in regs]
+        if any(v != vals[0] for v in vals):
+            if not all(isinstance(v, (float, int)) and not isinstance(v, bool)
+                       for v in vals):
+                return (f"grid field {f.name!r} is not numeric and cannot "
+                        "become a traced scalar")
+    return None
+
+
 def _grid_fields(regs: Sequence[Regularizer]) -> Tuple[str, ...]:
     """Names of dataclass fields that vary across the regularizer grid."""
     template = regs[0]
@@ -208,6 +230,39 @@ def run_sweep(data: Union[FederatedData, Sequence[FederatedData]],
               regs: Sequence[Regularizer],
               seeds: Union[int, Sequence[int]],
               cfg: MochaConfig) -> SweepResult:
+    """Deprecated shim: construct a ``repro.api.Experiment`` instead.
+
+    NOTE a deliberate capability change relative to the historical entry
+    point: grids this harness used to REJECT (semi_sync clocks, non-local
+    engines, mixed/non-numeric regularizer grids) now complete through the
+    router's sequential fallback, with the reason recorded in
+    ``Report.provenance`` -- only genuinely malformed inputs still raise.
+    """
+    from repro.api import Eval, Exec, Experiment, Method, Problem, Systems
+    from repro.api.compat import warn_legacy
+    warn_legacy("run_sweep()",
+                "Problem(train=[shuffles...]), Method(regularizers=grid)")
+    if isinstance(data, FederatedData) and data.X.ndim != 4:
+        raise ValueError("run_sweep expects stacked (S, m, n, d) data; got "
+                         f"X of shape {data.X.shape}")
+    exp = Experiment(
+        problem=Problem(train=data),
+        method=Method(loss=cfg.loss, regularizers=tuple(regs),
+                      rounds=cfg.rounds,
+                      omega_update_every=cfg.omega_update_every,
+                      gamma=cfg.gamma, per_task_sigma=cfg.per_task_sigma,
+                      budget=cfg.budget),
+        systems=Systems(network=cfg.network, config=cfg.systems),
+        exec=Exec(engine=cfg.engine, driver=cfg.driver,
+                  gram_max_d=cfg.gram_max_d),
+        eval=Eval(record_every=cfg.record_every))
+    return exp.run(seeds).result
+
+
+def _run_sweep(data: Union[FederatedData, Sequence[FederatedData]],
+               regs: Sequence[Regularizer],
+               seeds: Union[int, Sequence[int]],
+               cfg: MochaConfig) -> SweepResult:
     """Run the (regularizer-grid x shuffle) sweep as batched dispatches.
 
     ``data``: a stacked FederatedData (leading shuffle axis) or a sequence of

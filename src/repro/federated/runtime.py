@@ -118,19 +118,22 @@ def distributed_round(mesh: Mesh, loss: Loss, max_steps: int,
 def run_mocha_distributed(data: FederatedData, reg: "Regularizer",
                           cfg: "MochaConfig", mesh: Optional[Mesh] = None,
                           comm_dtype=None) -> "RunResult":
-    """``run_mocha`` on the shard_map runtime (tasks sharded over the mesh).
+    """Deprecated shim: construct a ``repro.api.Experiment`` with
+    ``Exec(engine='sharded', mesh=..., comm_dtype=...)`` instead.
 
-    Back-compat entry point (formerly ``repro.federated.simulator``): the
-    Algorithm-1 loop lives in ONE place -- ``repro.core.mocha.run_mocha`` --
-    parameterized by a ``RoundEngine``; this wrapper keeps the historical
-    call signature on top of its ``ShardedEngine`` backend and, because the
-    unified driver owns the history schema, emits exactly the same keys as
-    every other engine.
+    Back-compat entry point (formerly ``repro.federated.simulator``); folded
+    into the same shim layer as ``run_mocha`` -- one deprecation path, one
+    warning message (repro.api.compat), bit-parity-tested in
+    tests/test_api.py.
     """
+    from repro.api.compat import experiment_from_mocha, warn_legacy
     from repro.core.engine import ShardedEngine
-    from repro.core.mocha import run_mocha
-    return run_mocha(data, reg, cfg,
-                     engine=ShardedEngine(mesh=mesh, comm_dtype=comm_dtype))
+    warn_legacy("run_mocha_distributed()",
+                "Exec(engine='sharded', mesh=..., comm_dtype=...)")
+    exp = experiment_from_mocha(
+        data, reg, cfg, engine=ShardedEngine(mesh=mesh,
+                                             comm_dtype=comm_dtype))
+    return exp.run(cfg.seed).result
 
 
 def lower_federated_round(mesh: Mesh, loss: Loss, max_steps: int,

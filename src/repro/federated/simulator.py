@@ -1,19 +1,17 @@
-"""Deprecated alias module: the distributed driver lives in
-``repro.federated.runtime``.
+"""Deprecated alias module: part of the ONE legacy shim layer
+(repro.api.compat).
 
-This module was a 27-line wrapper around ``run_mocha`` that only re-exported
-``run_mocha_distributed``; the function now lives next to the shard_map
-runtime it drives.  Importing from here keeps working (with a
-DeprecationWarning) so historical call sites do not break --
-tests/test_runtime.py pins the alias.
+Importing from here keeps working -- ``run_mocha_distributed`` is the
+shard_map shim from ``repro.federated.runtime``, itself deprecated in favor
+of ``repro.api.Experiment`` with ``Exec(engine='sharded')`` --
+tests/test_runtime.py pins the alias and its DeprecationWarning.
 """
 from __future__ import annotations
 
-import warnings
-
+from repro.api.compat import warn_legacy
 from repro.federated.runtime import run_mocha_distributed  # noqa: F401
 
-warnings.warn(
-    "repro.federated.simulator is deprecated; import run_mocha_distributed "
-    "from repro.federated.runtime instead.",
-    DeprecationWarning, stacklevel=2)
+# stacklevel=3: warn_legacy adds a frame, so 3 attributes the warning to the
+# file whose import triggered this module body (the actual offender)
+warn_legacy("repro.federated.simulator",
+            "Exec(engine='sharded', mesh=..., comm_dtype=...)", stacklevel=3)

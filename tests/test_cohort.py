@@ -121,8 +121,8 @@ def test_pack_cohort_layout():
 
 def _small_cfg(**kw):
     base = dict(rounds=6, cohort=16, clusters=3, dropout=0.2,
-                omega_update_every=2, budget=BudgetConfig(passes=1.0),
-                record_every=2, seed=1)
+                omega_update_every=2, record_every=2, seed=1,
+                inner=MochaConfig(budget=BudgetConfig(passes=1.0)))
     base.update(kw)
     return CohortConfig(**base)
 
@@ -144,7 +144,9 @@ def test_cohort_sharded_engine_matches_local():
     the cohort layer)."""
     pop = Population(SPEC, seed=0)
     loc = run_mocha_cohort(pop, REG, _small_cfg())
-    sh = run_mocha_cohort(pop, REG, _small_cfg(engine="sharded"))
+    sh = run_mocha_cohort(pop, REG, _small_cfg(
+        inner=MochaConfig(budget=BudgetConfig(passes=1.0),
+                          engine="sharded")))
     assert loc.history == sh.history
     np.testing.assert_array_equal(loc.centroids, sh.centroids)
 
@@ -193,9 +195,8 @@ def test_cohort_learns_cluster_structure():
                                label_noise=0.02)
     pop = Population(spec, seed=1)
     cfg = CohortConfig(rounds=40, cohort=32, clusters=3,
-                       omega_update_every=10,
-                       budget=BudgetConfig(passes=2.0), record_every=40,
-                       seed=2)
+                       omega_update_every=10, record_every=40, seed=2,
+                       inner=MochaConfig(budget=BudgetConfig(passes=2.0)))
     res = run_mocha_cohort(pop, REG, cfg)
     ids = np.arange(spec.m)
     true = pop.true_assignments(ids)
@@ -215,8 +216,8 @@ def test_cohort_small_cohorts_warm_every_cluster():
     subset forever."""
     pop = Population(dataclasses.replace(SPEC, m=200), seed=3)
     cfg = CohortConfig(rounds=25, cohort=4, clusters=8, dropout=0.0,
-                       budget=BudgetConfig(passes=1.0), record_every=25,
-                       seed=5)
+                       record_every=25, seed=5,
+                       inner=MochaConfig(budget=BudgetConfig(passes=1.0)))
     res = run_mocha_cohort(pop, REG, cfg)
     assert (res.relationship.counts > 0).all(), res.relationship.counts
     # participation ground truth matches the schedule bound here (no drops)
@@ -230,7 +231,8 @@ def test_cohort_participation_reflects_budget_drops():
     bound must exceed it."""
     pop = Population(SPEC, seed=0)
     cfg = _small_cfg(rounds=10, dropout=0.0, record_every=10,
-                     budget=BudgetConfig(passes=1.0, drop_prob=0.5))
+                     inner=MochaConfig(
+                         budget=BudgetConfig(passes=1.0, drop_prob=0.5)))
     res = run_mocha_cohort(pop, REG, cfg)
     sched = res.schedule.participation_counts(SPEC.m)
     assert res.participation.sum() < sched.sum()
@@ -247,8 +249,8 @@ def test_cohort_full_participation_matches_run_mocha():
     pop = Population(spec, seed=0)
     cfg = CohortConfig(rounds=rounds, cohort=m, clusters=1, eta=eta,
                        dropout=0.0, sampler="uniform", omega_update_every=0,
-                       budget=BudgetConfig(passes=2.0), record_every=rounds,
-                       seed=4)
+                       record_every=rounds, seed=4,
+                       inner=MochaConfig(budget=BudgetConfig(passes=2.0)))
     res_c = run_mocha_cohort(pop, REG, cfg)
 
     data = pack_cohort(pop, np.arange(m))
@@ -322,8 +324,8 @@ def test_cohort_population_scale_100k():
     cfg = CohortConfig(rounds=10, cohort=64, clusters=5, sampler="weighted",
                        dropout=0.1, omega_update_every=5,
                        systems=SystemsConfig(rate_lo=0.5, rate_hi=2.0),
-                       budget=BudgetConfig(passes=1.0), record_every=5,
-                       seed=0, cache_clients=1024)
+                       record_every=5, seed=0, cache_clients=1024,
+                       inner=MochaConfig(budget=BudgetConfig(passes=1.0)))
     a = run_mocha_cohort(pop, REG, cfg)
     b = run_mocha_cohort(pop, REG, cfg)
     assert a.history == b.history

@@ -162,6 +162,33 @@ def test_history_columns_equal_length(problem, record_every):
     assert set(lengths.values()) == {expected}
 
 
+@pytest.mark.parametrize("rounds,record_every", [(1, 1), (1, 5), (3, 7),
+                                                 (2, 5)])
+@pytest.mark.parametrize("driver", ["scan", "loop"])
+def test_history_degenerate_cadences(problem, rounds, record_every, driver):
+    """Regression (PR 5 satellite): record_every > rounds and rounds == 1
+    must keep the final-round row and a rectangular history on BOTH
+    drivers."""
+    train, _ = problem
+    res = run_mocha(train, REG, MochaConfig(
+        loss="hinge", rounds=rounds, record_every=record_every,
+        driver=driver, budget=BudgetConfig(passes=0.5)))
+    lengths = {len(v) for v in res.history.values()}
+    assert len(lengths) == 1, f"ragged history: {res.history}"
+    assert res.history["round"][-1] == rounds - 1   # final row present
+    expected = sorted({*range(0, rounds, record_every), rounds - 1})
+    assert res.history["round"] == expected
+
+
+def test_record_rounds_validation():
+    from repro.core.mocha import _record_rounds
+    with pytest.raises(ValueError, match="rounds >= 1"):
+        _record_rounds(0, 1)
+    with pytest.raises(ValueError, match="record_every >= 1"):
+        _record_rounds(5, 0)
+    np.testing.assert_array_equal(_record_rounds(1, 10), [True])
+
+
 def test_history_time_axis_monotone(problem):
     train, _ = problem
     res = run_mocha(train, REG, MochaConfig(

@@ -106,15 +106,21 @@ def test_sweep_per_shuffle_seeds(shuffles):
         np.testing.assert_array_equal(res.W[0, s], ref.W)
 
 
-def test_sweep_rejects_mixed_types_and_semi_sync(shuffles):
+def test_sweep_mixed_types_and_semi_sync_fall_back(shuffles):
+    """Capability change (PR 5): grids the harness used to REJECT now
+    complete through the router's sequential fallback -- mixed regularizer
+    types and semi_sync clocks produce ordinary SweepResults."""
     trains = stack_federations([tr for tr, _ in shuffles])
-    cfg = MochaConfig(loss="hinge", rounds=2)
-    with pytest.raises(TypeError, match="mixed regularizer"):
-        run_sweep(trains, [MeanRegularized(), Probabilistic()], 0, cfg)
+    cfg = MochaConfig(loss="hinge", rounds=2, record_every=2)
+    mixed = run_sweep(trains, [MeanRegularized(lambda1=0.0, lambda2=1e-2),
+                               Probabilistic(lam=1e-2)], 0, cfg)
+    assert mixed.W.shape == (2, 3, 5, 6)
     semi = dataclasses.replace(cfg, systems=SystemsConfig(
         policy="semi_sync", clock_cycle_s=0.1))
-    with pytest.raises(ValueError, match="semi_sync"):
-        run_sweep(trains, [MeanRegularized()], 0, semi)
+    res = run_sweep(trains, [MeanRegularized(lambda1=0.0, lambda2=1e-2)], 0,
+                    semi)
+    assert res.W.shape == (1, 3, 5, 6)
+    assert np.isfinite(res.gap).all()
 
 
 def test_sweep_degenerate_single_cell(shuffles):
