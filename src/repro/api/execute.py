@@ -147,8 +147,8 @@ def _run_grid_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
 
     Semantics match the batched sweep where both apply (final state per
     cell); under ``semi_sync`` each cell gets its own fresh ``SystemsTrace``
-    derived from ``Systems.config``, which is exactly what the batched path
-    cannot express."""
+    derived from ``Systems.config`` -- the same per-round cap matrix the
+    batched sweep pre-samples once, so the two paths stay bit-identical."""
     shuffles = exp.problem.shuffle_list()
     regs = exp.method.regularizers
     seeds = _shuffle_seeds(seed, len(shuffles))

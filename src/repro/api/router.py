@@ -4,9 +4,13 @@ Replaces the scattered ``ValueError`` walls the legacy entry points grew
 (``run_sweep`` rejecting non-local engines and semi_sync clocks) with
 explicit routing: when the batched path does not apply, the experiment
 FALLS BACK to an equivalent sequential path and the reason is logged and
-recorded in ``Report.provenance`` -- a lambda-grid sweep under a semi_sync
-clock or on the sharded engine *works* today and silently speeds up when a
-batched path later learns the capability, with no API change.
+recorded in ``Report.provenance`` -- a lambda-grid sweep on the sharded
+engine *works* today and silently speeds up when a batched path later
+learns the capability, with no API change.  Semi_sync lambda grids are the
+first capability to graduate this way: the vmapped sweep folds the
+pre-sampled clock-cycle caps into its budget matrix (core/sweep.py), so
+those grids now route to ``sweep`` with no fallback reason, cell-for-cell
+bit-identical to the sequential path they used to take.
 
 Paths (the golden table in tests/test_api.py pins the full matrix):
 
@@ -52,10 +56,6 @@ def batch_incompatibility(exp: Experiment, engine) -> Optional[str]:
     if engine.name != "local":
         return (f"engine {engine.name!r} has no vmapped batched path; "
                 "grid cells run sequentially through the core driver")
-    if exp.systems.policy != "sync":
-        return ("the batched sweep does not simulate per-run "
-                f"{exp.systems.policy!r} clocks; cells run sequentially, "
-                "each with its own SystemsTrace")
     if exp.method.budget_fn is not None:
         return "a custom budget_fn closure cannot be batched across cells"
     if exp.method.omega0 is not None or exp.exec.state0 is not None:

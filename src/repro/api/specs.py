@@ -185,7 +185,8 @@ class Exec:
     ``engine='sharded'``.  ``gram_max_d`` overrides the SDCA residual-mode
     crossover per run (DESIGN.md section 3a).  The cohort block is sized by
     ``cohort`` / ``inner_rounds`` / ``clusters`` / ``eta`` /
-    ``cache_clients`` / ``n_pad`` (population problems only).
+    ``cache_clients`` / ``n_pad`` and pipelined by ``overlap`` /
+    ``staleness`` (population problems only).
     """
 
     engine: Any = "local"              # local | pallas | sharded | instance
@@ -200,10 +201,20 @@ class Exec:
     eta: float = 0.5                   # per-client self-affinity in Omega_S
     cache_clients: int = 4096          # bounded warm-start/delta cache
     n_pad: Optional[int] = None        # None = PopulationSpec.pad_width
+    #: cohort pipeline depth: how many blocks may be packed ahead of the
+    #: one currently solving (1 = the strictly sequential block loop)
+    overlap: int = 1
+    #: max solved-but-unmerged blocks when a block launches (0 = every
+    #: prior block folds in first -- bit-identical to sequential)
+    staleness: int = 0
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
             raise ValueError(f"driver {self.driver!r} not in {DRIVERS}")
+        if self.overlap < 1:
+            raise ValueError(f"need overlap >= 1, got {self.overlap}")
+        if self.staleness < 0:
+            raise ValueError(f"need staleness >= 0, got {self.staleness}")
 
     def resolve_engine(self):
         """Instantiate the engine (mesh/comm_dtype configure 'sharded')."""
@@ -326,6 +337,8 @@ def as_cohort_config(exp: Experiment, seed: int = 0):
         seed=int(seed),
         record_every=exp.eval.record_every,
         n_pad=exp.exec.n_pad,
+        overlap=exp.exec.overlap,
+        staleness=exp.exec.staleness,
         inner=inner,
     )
 

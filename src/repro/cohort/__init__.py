@@ -6,8 +6,8 @@ the round is the unchanged cross-silo machinery (DESIGN.md section 7).
 """
 from repro.cohort.driver import (COHORT_HISTORY_KEYS, CohortConfig,
                                  CohortRunResult, run_mocha_cohort)
-from repro.cohort.omega import ClusterOmega
-from repro.cohort.packing import pack_cohort
+from repro.cohort.omega import ClusterOmega, StalenessBoundedMerger
+from repro.cohort.packing import CohortPacker, pack_cohort
 from repro.cohort.population import (CROSS_DEVICE_1K, CROSS_DEVICE_1M,
                                      CROSS_DEVICE_10K, CROSS_DEVICE_100K,
                                      POPULATIONS, ClientBlock, Population,

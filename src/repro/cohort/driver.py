@@ -20,6 +20,26 @@ What stays device-resident / bounded:
     a bounded client cache.  No O(m^2) object exists anywhere
     (tests/test_cohort.py pins the memory budget).
 
+Two block loops share the machinery above (``_BlockLoop``):
+
+  * the SEQUENTIAL loop (``overlap = 1``, ``staleness = 0``): pack, solve,
+    fold, one block at a time -- the reference semantics;
+  * the PIPELINED loop (``overlap > 1`` or ``staleness > 0``): a software
+    pipeline of three single-worker stages.  A pack worker prefetches up
+    to ``overlap`` blocks ahead; a solve worker runs the device programs
+    strictly serially (so the shared ``SystemsTrace`` advances in block
+    order at ANY staleness); the main thread samples, snapshots launch
+    state, and folds completed blocks while the solve worker is busy.  The
+    ``StalenessBoundedMerger`` (repro.cohort.omega) bounds how many
+    solved-but-unmerged blocks a launch may run ahead of: at
+    ``staleness = 0`` every prior block folds before each launch and the
+    pipeline is BIT-IDENTICAL to the sequential loop (the parity contract,
+    pinned in tests/test_cohort.py); at S >= 1 launches read state at most
+    S blocks behind -- a bounded-inexactness source in the spirit of the
+    paper's inexact local solves.  Merge points depend only on block
+    COUNTS, never on thread timing, so results are deterministic at every
+    (overlap, staleness).
+
 With K = m, a uniform sampler, no dropout, and omega refreshes off, every
 block is exactly one full-participation MOCHA round over the (permuted)
 population with the equivalent fixed Omega -- the cohort driver degrades to
@@ -28,13 +48,15 @@ plain ``run_mocha`` (the parity test in tests/test_cohort.py).
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cohort.omega import ClusterOmega
-from repro.cohort.packing import pack_cohort
+from repro.cohort.omega import ClusterOmega, StalenessBoundedMerger
+from repro.cohort.packing import CohortPacker
 from repro.cohort.population import Population
 from repro.cohort.sampler import CohortSampler, CohortSchedule
 from repro.core import dual as dual_mod
@@ -80,6 +102,8 @@ class CohortConfig:
     seed: int = 0
     record_every: int = 1
     n_pad: Optional[int] = None        # None = PopulationSpec.pad_width
+    overlap: int = 1                   # pack-prefetch depth (1 = sequential)
+    staleness: int = 0                 # max solved-but-unmerged at launch
     #: the per-block solver view; engine shards the COHORT, never the
     #: population
     inner: MochaConfig = dataclasses.field(default_factory=MochaConfig)
@@ -102,8 +126,10 @@ class CohortRunResult:
     rate_mult: np.ndarray          # (m,) per-client hardware multipliers
     #: (m,) blocks in which each client EXECUTED steps (the ground truth the
     #: state updates used; ``schedule.participation_counts`` is only the
-    #: schedule-level upper bound -- budget drops happen below it)
-    participation: np.ndarray = None
+    #: schedule-level upper bound -- budget drops happen below it).  Always
+    #: populated by ``_run_cohort``; Optional only so the dataclass field
+    #: has a well-typed empty default.
+    participation: Optional[np.ndarray] = None
 
     @property
     def omega_k(self) -> np.ndarray:
@@ -156,9 +182,191 @@ def run_mocha_cohort(pop: Population, reg: Regularizer,
                   gram_max_d=cfg.inner.gram_max_d, cohort=cfg.cohort,
                   inner_rounds=cfg.inner_rounds, clusters=cfg.clusters,
                   eta=cfg.eta, cache_clients=cfg.cache_clients,
-                  n_pad=cfg.n_pad),
+                  n_pad=cfg.n_pad, overlap=cfg.overlap,
+                  staleness=cfg.staleness),
         eval=Eval(record_every=cfg.record_every))
     return exp.run(cfg.seed).result
+
+
+@dataclasses.dataclass
+class _SolvedBlock:
+    """Host-side snapshot of one solved block.
+
+    Every field is plain host data, pulled off-device by the SOLVE stage:
+    the fold stage touches no device buffers, so folding block b - 1 on the
+    main thread never synchronizes with block b's running program.
+    ``elapsed_s`` is the trace clock captured right after this block's
+    rounds committed -- at any staleness the solve worker advances the
+    trace strictly in block order, so this is the same value the sequential
+    loop records.
+    """
+
+    W: np.ndarray            # (K, d) solved cohort weights
+    alpha: np.ndarray        # (K, n_pad) solved dual blocks
+    participated: np.ndarray  # (K,) bool: slot executed > 0 steps
+    max_steps: int           # max over the executed budget matrix
+    dual: float
+    primal: float
+    gap: float
+    elapsed_s: float
+
+
+class _BlockLoop:
+    """Per-block machinery shared by the sequential and pipelined drivers.
+
+    The three stages are thread-role-separated: ``launch_args`` and
+    ``fold`` touch the mutable ``ClusterOmega`` and run on the MAIN thread
+    only; ``solve`` owns the shared ``SystemsTrace`` and runs on a single
+    solve worker (or inline, sequentially) so the simulated clock advances
+    in block order no matter how deep the pipeline is.
+    """
+
+    def __init__(self, pop: Population, reg: Regularizer, cfg: CohortConfig):
+        m, spec = pop.m, pop.spec
+        self.cfg, self.reg = cfg, reg
+        self.n_pad = int(cfg.n_pad or spec.pad_width)
+        self.state = ClusterOmega(m, cfg.clusters, spec.d, reg, eta=cfg.eta,
+                                  cache_clients=cfg.cache_clients)
+        self.merger = StalenessBoundedMerger(
+            self.state, reg, omega_update_every=cfg.omega_update_every,
+            staleness=cfg.staleness)
+
+        # population hardware: one O(m) multiplier vector drives BOTH the
+        # availability-weighted sampler and the per-block clock injection
+        sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
+        self.rate_mult = population_rates(m, sys_cfg)
+        sampler = CohortSampler(
+            m=m, cohort=cfg.cohort, kind=cfg.sampler, dropout=cfg.dropout,
+            weights=self.rate_mult if cfg.sampler == "weighted" else None)
+        self.schedule = sampler.presample(cfg.seed, cfg.rounds)
+
+        # cohort-slot trace: slot s hosts a different client each block, so
+        # the static per-slot rate draw is neutralized (rate_lo = rate_hi =
+        # 1) and the sampled clients' multipliers are injected per block
+        slot_cfg = dataclasses.replace(sys_cfg, rate_lo=1.0, rate_hi=1.0)
+        self.trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)
+
+        self.inner = cfg.inner_config()
+        self.packer = CohortPacker(pop, cfg.cohort, self.n_pad)
+
+        self.record = _record_rounds(cfg.rounds, cfg.record_every)
+        self.history: Dict[str, List[float]] = {
+            k: [] for k in COHORT_HISTORY_KEYS}
+        self.seen = np.zeros(m, bool)
+        self.n_seen = 0
+        self.participation = np.zeros(m, np.int64)
+
+    def launch_args(self, b: int):
+        """MAIN THREAD: block b's cohort + its launch-time state snapshot.
+
+        The warm-start alpha rows and the expanded cohort Omega are read
+        from the mutable ``ClusterOmega`` here, at launch -- this read
+        point is exactly what the staleness bound governs.
+        """
+        ids, dropped = self.schedule.ids[b], self.schedule.dropped[b]
+        return (ids, dropped, self.state.cohort_alpha(ids, self.n_pad),
+                self.state.cohort_omega(ids))
+
+    def solve(self, b: int, data, ids, dropped, alpha0_np,
+              omega0) -> _SolvedBlock:
+        """SOLVE STAGE: block b's device program + host pulls.
+
+        Strictly serial across blocks (inline or on the one-worker solve
+        pool), so ``set_rate_scale`` / trace draws / commits interleave in
+        block order at any pipeline depth.
+        """
+        cfg, inner = self.cfg, self.inner
+        self.trace.set_rate_scale(self.rate_mult[ids])
+        alpha0 = jnp.asarray(alpha0_np)
+        warm = DualState(alpha=alpha0, v=dual_mod.compute_v(data, alpha0))
+        res = _run_mocha(
+            data, self.reg,
+            dataclasses.replace(inner, seed=_block_seed(cfg.seed, b)),
+            omega0=omega0,
+            budget_fn=drop_masked_budgets(
+                inner.budget, np.broadcast_to(dropped, (cfg.inner_rounds,
+                                                        cfg.cohort))),
+            trace=self.trace, state0=warm)
+        budgets = np.asarray(res.round_budgets)
+        return _SolvedBlock(
+            W=np.asarray(res.W), alpha=np.asarray(res.state.alpha),
+            participated=budgets.sum(axis=0) > 0,
+            # max over the block's EXECUTED budget matrix, not the inner
+            # history column (which subsamples to record rounds only)
+            max_steps=int(budgets.max()),
+            dual=res.final("dual"), primal=res.final("primal"),
+            gap=res.final("gap"), elapsed_s=self.trace.elapsed_s)
+
+    def fold(self, b: int, ids: np.ndarray, sizes: np.ndarray,
+             s: _SolvedBlock) -> None:
+        """MAIN THREAD: fold block b (schedule order, via the merger)."""
+        self.participation[ids[s.participated]] += 1
+        self.merger.fold(b, ids, s.W, s.alpha, sizes, s.participated)
+        new = ids[s.participated & ~self.seen[ids]]
+        self.seen[new] = True
+        self.n_seen += new.size
+        if self.record[b]:
+            h = self.history
+            h["round"].append(b)
+            h["dual"].append(s.dual)
+            h["primal"].append(s.primal)
+            h["gap"].append(s.gap)
+            h["time"].append(s.elapsed_s)
+            h["round_max_steps"].append(s.max_steps)
+            h["unique_clients"].append(self.n_seen)
+
+    def result(self) -> CohortRunResult:
+        return CohortRunResult(
+            relationship=self.state, history=self.history, trace=self.trace,
+            schedule=self.schedule, rate_mult=self.rate_mult,
+            participation=self.participation)
+
+
+def _run_blocks_sequential(loop: _BlockLoop, rounds: int) -> None:
+    """The reference block loop: pack, solve, fold, one block at a time."""
+    for b in range(rounds):
+        ids, dropped, alpha0, omega0 = loop.launch_args(b)
+        data, sizes = loop.packer.pack(ids)
+        loop.fold(b, ids, sizes, loop.solve(b, data, ids, dropped, alpha0,
+                                            omega0))
+
+
+def _run_blocks_pipelined(loop: _BlockLoop, rounds: int, overlap: int,
+                          staleness: int) -> None:
+    """Depth-``overlap`` software pipeline with staleness-bounded merging.
+
+    Single-worker pools make each stage serial (pack order, solve order,
+    and therefore trace order are all schedule order); the drain rule
+    ``while in_flight > staleness`` makes merge points a pure function of
+    block counts, so the schedule of state reads -- and hence the result --
+    is deterministic for every (overlap, staleness), and identical to the
+    sequential loop at staleness 0.
+    """
+    depth = max(1, overlap)
+    with ThreadPoolExecutor(1, "cohort-pack") as packs, \
+            ThreadPoolExecutor(1, "cohort-solve") as solves:
+        pack_q = deque(
+            packs.submit(loop.packer.pack, loop.schedule.ids[b])
+            for b in range(min(depth, rounds)))
+        in_flight: deque = deque()   # (block, ids, sizes, future)
+        for b in range(rounds):
+            while len(in_flight) > staleness:
+                fb, fids, fsizes, fut = in_flight.popleft()
+                loop.fold(fb, fids, fsizes, fut.result())
+            data, sizes = pack_q.popleft().result()
+            if b + depth < rounds:
+                pack_q.append(packs.submit(loop.packer.pack,
+                                           loop.schedule.ids[b + depth]))
+            ids, dropped, alpha0, omega0 = loop.launch_args(b)
+            if not loop.merger.admissible(b):
+                raise RuntimeError(   # drain rule broken -- never expected
+                    f"block {b} launching with merge frontier "
+                    f"{loop.merger.merged_through} (staleness {staleness})")
+            in_flight.append((b, ids, sizes, solves.submit(
+                loop.solve, b, data, ids, dropped, alpha0, omega0)))
+        while in_flight:
+            fb, fids, fsizes, fut = in_flight.popleft()
+            loop.fold(fb, fids, fsizes, fut.result())
 
 
 def _run_cohort(pop: Population, reg: Regularizer,
@@ -170,70 +378,18 @@ def _run_cohort(pop: Population, reg: Regularizer,
     coupling inside each ``run_mocha`` call, and its ``update_omega`` is
     the central Omega step applied to the (k, d) centroid matrix every
     ``omega_update_every`` blocks.
+
+    ``cfg.overlap`` / ``cfg.staleness`` select the block loop: the
+    sequential reference at (1, 0), the overlapped pipeline otherwise
+    (bit-identical at staleness 0 -- see the module docstring).
     """
-    m, spec = pop.m, pop.spec
-    n_pad = int(cfg.n_pad or spec.pad_width)
-    state = ClusterOmega(m, cfg.clusters, spec.d, reg, eta=cfg.eta,
-                         cache_clients=cfg.cache_clients)
-
-    # population hardware: one O(m) multiplier vector drives BOTH the
-    # availability-weighted sampler and the per-block clock injection
-    sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
-    rate_mult = population_rates(m, sys_cfg)
-    sampler = CohortSampler(
-        m=m, cohort=cfg.cohort, kind=cfg.sampler, dropout=cfg.dropout,
-        weights=rate_mult if cfg.sampler == "weighted" else None)
-    schedule = sampler.presample(cfg.seed, cfg.rounds)
-
-    # cohort-slot trace: slot s hosts a different client each block, so the
-    # static per-slot rate draw is neutralized (rate_lo = rate_hi = 1) and
-    # the sampled clients' multipliers are injected per block
-    slot_cfg = dataclasses.replace(sys_cfg, rate_lo=1.0, rate_hi=1.0)
-    trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)
-
-    inner = cfg.inner_config()
-
-    record = _record_rounds(cfg.rounds, cfg.record_every)
-    history: Dict[str, List[float]] = {k: [] for k in COHORT_HISTORY_KEYS}
-    seen = np.zeros(m, bool)
-    n_seen = 0
-    participation = np.zeros(m, np.int64)
-
-    for b in range(cfg.rounds):
-        ids, dropped = schedule.ids[b], schedule.dropped[b]
-        data = pack_cohort(pop, ids, n_pad)
-        sizes = np.asarray(data.n_t).astype(np.int64)
-        alpha0 = jnp.asarray(state.cohort_alpha(ids, n_pad))
-        warm = DualState(alpha=alpha0, v=dual_mod.compute_v(data, alpha0))
-        trace.set_rate_scale(rate_mult[ids])
-        res = _run_mocha(
-            data, reg, dataclasses.replace(inner, seed=_block_seed(cfg.seed, b)),
-            omega0=state.cohort_omega(ids),
-            budget_fn=drop_masked_budgets(
-                inner.budget, np.broadcast_to(dropped, (cfg.inner_rounds,
-                                                      cfg.cohort))),
-            trace=trace, state0=warm)
-
-        participated = res.round_budgets.sum(axis=0) > 0
-        participation[ids[participated]] += 1
-        state.update(ids, res.W, res.state.alpha, sizes, participated)
-        if cfg.omega_update_every and (b + 1) % cfg.omega_update_every == 0:
-            state.refresh_omega(reg)
-
-        new = ids[participated & ~seen[ids]]
-        seen[new] = True
-        n_seen += new.size
-        if record[b]:
-            history["round"].append(b)
-            history["dual"].append(res.final("dual"))
-            history["primal"].append(res.final("primal"))
-            history["gap"].append(res.final("gap"))
-            history["time"].append(trace.elapsed_s)
-            # max over the block's EXECUTED budget matrix, not the inner
-            # history column (which subsamples to record rounds only)
-            history["round_max_steps"].append(int(res.round_budgets.max()))
-            history["unique_clients"].append(n_seen)
-
-    return CohortRunResult(relationship=state, history=history, trace=trace,
-                           schedule=schedule, rate_mult=rate_mult,
-                           participation=participation)
+    if cfg.overlap < 1:
+        raise ValueError(f"need overlap >= 1, got {cfg.overlap}")
+    if cfg.staleness < 0:
+        raise ValueError(f"need staleness >= 0, got {cfg.staleness}")
+    loop = _BlockLoop(pop, reg, cfg)
+    if cfg.overlap > 1 or cfg.staleness > 0:
+        _run_blocks_pipelined(loop, cfg.rounds, cfg.overlap, cfg.staleness)
+    else:
+        _run_blocks_sequential(loop, cfg.rounds)
+    return loop.result()

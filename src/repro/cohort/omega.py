@@ -165,3 +165,58 @@ class ClusterOmega:
         cache = sum(a.nbytes + w.nbytes for a, w in self._cache.values())
         return (self.omega_k.nbytes + self.centroids.nbytes
                 + self.counts.nbytes + self.assign.nbytes + cache)
+
+
+class StalenessBoundedMerger:
+    """In-order folding of solved cohort blocks with a bounded merge lag.
+
+    The overlapped cohort driver (repro.cohort.driver) launches block b
+    while earlier blocks may still be solving; their statistics fold into
+    the shared ``ClusterOmega`` only when they complete.  This class is the
+    ordering-and-bounding contract that keeps that pipeline deterministic:
+
+      * folds are STRICTLY schedule-ordered (block ``merged_through + 1``
+        or nothing) -- the incremental centroid/assignment updates are
+        order-sensitive, so out-of-order folds would change the state;
+      * block b may LAUNCH only once every block <= b - 1 - S is folded
+        (``admissible``), bounding the warm-start/relationship staleness a
+        launch can observe to S solved-but-unmerged blocks.
+
+    The omega-refresh cadence lives here too: the central cluster-space
+    Omega step fires on the FOLD of every ``omega_update_every``-th block,
+    which is the same schedule position the sequential loop fires it at.
+
+    With S = 0 the admissibility rule forces full drain before every
+    launch, so every launch reads exactly the state the sequential loop
+    would -- the pipeline is bit-identical to it (the parity contract,
+    pinned in tests/test_cohort.py).  With S >= 1 launches read state that
+    is at most S blocks behind: one more bounded-inexactness source on top
+    of the paper's inexact local solves (theta), not a new algorithm.
+    """
+
+    def __init__(self, state: ClusterOmega, reg: Regularizer,
+                 omega_update_every: int = 0, staleness: int = 0):
+        if staleness < 0:
+            raise ValueError(f"need staleness >= 0, got {staleness}")
+        self.state, self.reg = state, reg
+        self.omega_update_every = int(omega_update_every)
+        self.staleness = int(staleness)
+        self.merged_through = -1      # last folded block index
+
+    def admissible(self, block: int) -> bool:
+        """May ``block`` launch now?  (every block <= b - 1 - S folded)"""
+        return self.merged_through >= block - 1 - self.staleness
+
+    def fold(self, block: int, ids: np.ndarray, W_cohort: np.ndarray,
+             alpha_cohort: np.ndarray, sizes: np.ndarray,
+             participated: np.ndarray) -> None:
+        """Fold block ``block``'s solved statistics into the shared state."""
+        if block != self.merged_through + 1:
+            raise RuntimeError(
+                f"out-of-order fold: block {block} after "
+                f"{self.merged_through} (folds must follow schedule order)")
+        self.state.update(ids, W_cohort, alpha_cohort, sizes, participated)
+        if (self.omega_update_every
+                and (block + 1) % self.omega_update_every == 0):
+            self.state.refresh_omega(self.reg)
+        self.merged_through = block

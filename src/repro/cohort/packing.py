@@ -19,13 +19,76 @@ Layout invariants preserved here:
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.cohort.population import Population
 from repro.core.dual import FederatedData, with_xnorm2
+
+
+class CohortPacker:
+    """Reusable cohort packer: layout resolved once, buffers preallocated.
+
+    ``pack_cohort`` re-derives the (K, n_pad, d) layout and allocates three
+    fresh staging arrays every block even though cohort shapes are static
+    per run.  The packer hoists that per-block host work: the layout
+    metadata is resolved once at construction and the staging buffers are
+    reused across blocks.  Reuse is safe because ``jnp.array`` COPIES host
+    memory onto the device inside ``pack`` -- by the time ``pack`` returns,
+    the buffers are free to overwrite (this is why the copying ``jnp.array``
+    is used rather than ``jnp.asarray``, which may alias).
+
+    ``pack`` also returns the cohort's true sizes, derived from the cheap
+    population metadata stream (``Population.client_meta``) rather than by
+    summing the packed mask -- the driver's per-block ``np.asarray(n_t)``
+    device pull becomes a pure host derivation.
+
+    NOT thread-safe across concurrent ``pack`` calls (one packer per
+    pipeline stage; the overlapped driver packs on a single worker).
+    """
+
+    def __init__(self, pop: Population, cohort: int,
+                 n_pad: Optional[int] = None):
+        self.pop = pop
+        self.n_pad = int(n_pad or pop.spec.pad_width)
+        self.cohort = int(cohort)
+        d = pop.spec.d
+        self._X = np.zeros((self.cohort, self.n_pad, d), np.float32)
+        self._y = np.zeros((self.cohort, self.n_pad), np.float32)
+        self._mask = np.zeros((self.cohort, self.n_pad), np.float32)
+
+    def pack(self, ids: Sequence[int]) -> Tuple[FederatedData, np.ndarray]:
+        """(m=K federation, (K,) int64 true sizes) for cohort ``ids``."""
+        if len(ids) != self.cohort:
+            raise ValueError(
+                f"cohort of {len(ids)} clients in a {self.cohort}-slot "
+                "packer (cohort shapes are static per run)")
+        X, y, mask = self._X, self._y, self._mask
+        X[:] = 0.0
+        y[:] = 0.0
+        mask[:] = 0.0
+        sizes = np.empty(self.cohort, np.int64)
+        for slot, t in enumerate(ids):
+            block = self.pop.client_block(int(t))
+            if block.n > self.n_pad:
+                raise ValueError(
+                    f"client {int(t)} has n_t={block.n} > n_pad="
+                    f"{self.n_pad}; raise PopulationSpec.n_pad (cohort "
+                    "shapes are static per run)")
+            X[slot, :block.n] = block.X
+            y[slot, :block.n] = block.y
+            mask[slot, :block.n] = 1.0
+            sizes[slot] = block.n
+        data = with_xnorm2(FederatedData(
+            X=jnp.array(X), y=jnp.array(y), mask=jnp.array(mask)))
+        # the copies above dispatch ASYNCHRONOUSLY: block until the device
+        # buffers are materialized, else the next pack's buffer overwrite
+        # races the pending copy (jnp.array guarantees a copy, not when)
+        jax.block_until_ready(data)
+        return data, sizes
 
 
 def pack_cohort(pop: Population, ids: Sequence[int],
@@ -34,22 +97,8 @@ def pack_cohort(pop: Population, ids: Sequence[int],
 
     Memory is O(K * n_pad * d) -- the cohort, never the population.  Slot
     order follows ``ids`` (the schedule's order), so packing is
-    deterministic given a schedule.
+    deterministic given a schedule.  One-shot convenience over
+    ``CohortPacker`` (the block loop reuses a packer instead).
     """
-    spec = pop.spec
-    n_pad = int(n_pad or spec.pad_width)
-    K = len(ids)
-    X = np.zeros((K, n_pad, spec.d), np.float32)
-    y = np.zeros((K, n_pad), np.float32)
-    mask = np.zeros((K, n_pad), np.float32)
-    for slot, t in enumerate(ids):
-        block = pop.client_block(int(t))
-        if block.n > n_pad:
-            raise ValueError(
-                f"client {int(t)} has n_t={block.n} > n_pad={n_pad}; raise "
-                "PopulationSpec.n_pad (cohort shapes are static per run)")
-        X[slot, :block.n] = block.X
-        y[slot, :block.n] = block.y
-        mask[slot, :block.n] = 1.0
-    return with_xnorm2(FederatedData(
-        X=jnp.asarray(X), y=jnp.asarray(y), mask=jnp.asarray(mask)))
+    data, _ = CohortPacker(pop, len(ids), n_pad).pack(ids)
+    return data

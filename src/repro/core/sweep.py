@@ -12,9 +12,18 @@ Constraints (asserted):
   * all regularizers must be the same dataclass type; the fields that vary
     across the grid must be floats (they become traced scalars inside the
     vmapped driver -- shape-like ints such as ``Clustered.k`` must be fixed);
-  * no SystemsTrace timing (sweeps measure statistics, not simulated clocks;
-    ``cfg.systems`` must be None or ``sync``) and no ``budget_fn``;
+  * no ``budget_fn`` (budgets must pre-sample from the round-indexed key
+    schedule);
   * the LocalEngine scanned path only (the engine that supports vmap).
+
+Systems clocks: ``sync`` grids carry no caps.  ``semi_sync`` grids DO batch:
+the clock-cycle deadline caps are round-indexed and state-independent
+(``SystemsTrace.presample_caps``), and because each sequential-fallback cell
+builds a fresh trace from the SAME ``SystemsConfig``, every cell sees the
+same (rounds, m) cap matrix -- so one pre-sampled matrix, folded into the
+pre-sampled budgets exactly as the scanned driver folds it, reproduces the
+fallback cell-for-cell bitwise.  The sweep measures statistics, not time:
+no trace is replayed (run a single ``run_mocha`` for wall-clock curves).
 
 Shuffles with different ``n_max`` are right-padded to a common size by
 ``stack_federations``; masks/budgets make padding inert (padded points are
@@ -26,7 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -128,12 +137,19 @@ def _grid_fields(regs: Sequence[Regularizer]) -> Tuple[str, ...]:
 @partial(jax.jit, static_argnums=(0, 1, 2))
 def _sweep_exec(cfg: MochaConfig, template: Regularizer,
                 vfields: Tuple[str, ...], data: FederatedData,
-                params: Tuple[Array, ...], keys: Array):
+                params: Tuple[Array, ...], keys: Array,
+                caps: Optional[Array]):
     """The whole grid as one compiled program (cached on static config).
 
     One ``lax.scan`` covers every round; Omega refreshes run under a
     ``lax.cond`` on the (unbatched) round index, so the program compiles a
     single loop body no matter how many refreshes the schedule has.
+
+    ``caps`` is the pre-sampled (rounds, m) semi_sync deadline-cap matrix
+    (already clamped to ``max_steps`` on host, exactly as ``_run_scanned``
+    clamps before its min), broadcast to every grid cell, or None under
+    ``sync``.  None is an empty pytree, so the sync program traces without
+    the extra ``minimum`` and stays bitwise untouched.
     """
     from repro.core.engine import _local_round
 
@@ -145,7 +161,7 @@ def _sweep_exec(cfg: MochaConfig, template: Regularizer,
     rounds, every = cfg.rounds, cfg.omega_update_every
     gram = resolve_gram(data.X.shape[3], cfg.gram_max_d)
 
-    def driver(d, pvals, key):
+    def driver(d, pvals, key, caps):
         d = dual_mod.with_xnorm2(d)   # per-cell hoist of the static SDCA
         reg = dataclasses.replace(template, **dict(zip(vfields, pvals)))
         omega = reg.init_omega(m)
@@ -155,6 +171,8 @@ def _sweep_exec(cfg: MochaConfig, template: Regularizer,
         budget_keys, round_keys = round_key_schedule(key, rounds)
         budgets = presample_budgets(cfg.budget, budget_keys, d.n_t)
         budgets = jnp.minimum(budgets, max_steps)
+        if caps is not None:
+            budgets = jnp.minimum(budgets, caps.astype(budgets.dtype))
 
         def refresh(carry):
             state, omega, abar, K, q_t = carry
@@ -183,9 +201,9 @@ def _sweep_exec(cfg: MochaConfig, template: Regularizer,
         dual_val, primal_val, gap = _metrics_impl(loss, d, state, abar, K)
         return W, omega, dual_val, primal_val, gap
 
-    over_shuffles = jax.vmap(driver, in_axes=(0, None, 0))
-    over_grid = jax.vmap(over_shuffles, in_axes=(None, 0, None))
-    return over_grid(data, params, keys)
+    over_shuffles = jax.vmap(driver, in_axes=(0, None, 0, None))
+    over_grid = jax.vmap(over_shuffles, in_axes=(None, 0, None, None))
+    return over_grid(data, params, keys, caps)
 
 
 def _shard_grid(data: FederatedData, params: Tuple[Array, ...], keys: Array,
@@ -276,9 +294,6 @@ def _run_sweep(data: Union[FederatedData, Sequence[FederatedData]],
     if data.X.ndim != 4:
         raise ValueError("run_sweep expects stacked (S, m, n, d) data; got "
                          f"X of shape {data.X.shape}")
-    if cfg.systems is not None and cfg.systems.policy != "sync":
-        raise ValueError("run_sweep does not simulate semi_sync clocks; "
-                         "time sweeps through run_mocha instead")
     from repro.core.engine import get_engine
     if get_engine(cfg.engine).name != "local":
         raise ValueError(
@@ -305,10 +320,24 @@ def _run_sweep(data: Union[FederatedData, Sequence[FederatedData]],
         params = (jnp.zeros(len(regs)),)
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
 
+    # semi_sync: one (rounds, m) cap matrix covers every cell -- the caps a
+    # fresh per-cell trace would derive are a pure function of the shared
+    # SystemsConfig.  Clamp to max_steps on host BEFORE the device min, in
+    # the same order/dtype as _run_scanned, so cells match it bitwise.
+    caps = None
+    if cfg.systems is not None:
+        from repro.core.systems_model import presample_policy_caps
+        m, n_max = data.X.shape[1], data.X.shape[2]
+        caps = presample_policy_caps(m, data.X.shape[3], cfg.systems,
+                                     cfg.rounds)
+        if caps is not None:
+            caps = jnp.asarray(
+                np.minimum(caps, cfg.budget.max_steps(n_max)), jnp.int32)
+
     data, params, keys = _shard_grid(data, params, keys, len(regs),
                                      n_shuffles)
     W, omega, dual_val, primal_val, gap = _sweep_exec(
-        cfg, template, vfields, data, params, keys)
+        cfg, template, vfields, data, params, keys, caps)
     return SweepResult(
         W=np.asarray(W), omega=np.asarray(omega),
         dual=np.asarray(dual_val), primal=np.asarray(primal_val),

@@ -121,6 +121,24 @@ def population_rates(m: int, cfg: "SystemsConfig",
     return rng.uniform(cfg.rate_lo, cfg.rate_hi, m)
 
 
+def presample_policy_caps(m: int, d: int, cfg: "SystemsConfig",
+                          rounds: int) -> Optional[np.ndarray]:
+    """The (rounds, m) semi_sync deadline-cap matrix a FRESH trace derives.
+
+    Caps are a pure function of ``(SystemsConfig, m, d, rounds)`` -- the
+    trace RNG is seeded by ``cfg.seed``, never by run state -- so every
+    grid cell of a sweep sharing one ``SystemsConfig`` sees the SAME cap
+    matrix, which is exactly what the sequential fallback produces when it
+    builds one fresh ``SystemsTrace`` per cell.  The vmapped sweep
+    (core/sweep.py) folds this matrix into its pre-sampled budgets, making
+    semi_sync grids batchable cell-for-cell bit-identically to the
+    fallback.  Returns None under ``sync`` (no caps).
+    """
+    if cfg.policy != "semi_sync":
+        return None
+    return SystemsTrace(m, d, cfg).presample_caps(rounds)
+
+
 @dataclasses.dataclass(frozen=True)
 class SystemsConfig:
     """Static description of a federation's systems environment.

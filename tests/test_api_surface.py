@@ -26,7 +26,7 @@ EXPECTED_FIELDS = {
     "Systems": ("network", "config", "trace", "sampler", "dropout"),
     "Exec": ("engine", "driver", "gram_max_d", "mesh", "comm_dtype",
              "state0", "cohort", "inner_rounds", "clusters", "eta",
-             "cache_clients", "n_pad"),
+             "cache_clients", "n_pad", "overlap", "staleness"),
     "Eval": ("record_every", "holdout", "holdout_clients", "metrics"),
     "Experiment": ("problem", "method", "systems", "exec", "eval"),
     "RoutePlan": ("path", "driver", "engine", "reason"),
@@ -42,7 +42,7 @@ EXPECTED_CONFIG_FIELDS = {
     CohortConfig: ("rounds", "cohort", "inner_rounds", "sampler", "dropout",
                    "clusters", "eta", "omega_update_every", "cache_clients",
                    "network", "systems", "seed", "record_every", "n_pad",
-                   "inner"),
+                   "overlap", "staleness", "inner"),
 }
 
 

@@ -7,8 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cohort import (CohortConfig, CohortSampler, Population,
-                          PopulationSpec, pack_cohort, run_mocha_cohort)
+from repro.cohort import (ClusterOmega, CohortConfig, CohortPacker,
+                          CohortSampler, Population, PopulationSpec,
+                          StalenessBoundedMerger, pack_cohort,
+                          run_mocha_cohort)
 from repro.core import BudgetConfig, MochaConfig, Probabilistic, run_mocha
 from repro.core.systems_model import (SystemsConfig, SystemsTrace,
                                       population_rates)
@@ -115,6 +117,29 @@ def test_pack_cohort_layout():
     padded, m_real = pad_tasks(data, 8)
     assert (m_real, padded.m) == (4, 8)
     assert padded.xnorm2 is not None
+
+
+def test_cohort_packer_reuses_buffers_without_corruption():
+    """CohortPacker hoists the per-block host work: layout resolved once,
+    staging buffers reused -- a later pack must not corrupt an earlier
+    pack's device arrays, sizes come from the metadata stream (no device
+    pull), and the packed bytes match the one-shot pack_cohort."""
+    pop = Population(SPEC, seed=0)
+    packer = CohortPacker(pop, 4)
+    ids_a, ids_b = np.asarray([5, 0, 399, 7]), np.asarray([1, 2, 3, 4])
+    data_a, sizes_a = packer.pack(ids_a)
+    ref_a = pack_cohort(pop, ids_a)
+    np.testing.assert_array_equal(np.asarray(data_a.X), np.asarray(ref_a.X))
+    np.testing.assert_array_equal(np.asarray(data_a.y), np.asarray(ref_a.y))
+    np.testing.assert_array_equal(sizes_a, pop.client_sizes(ids_a))
+    a_before = np.asarray(data_a.X).copy()
+    data_b, sizes_b = packer.pack(ids_b)             # reuses the buffers
+    np.testing.assert_array_equal(np.asarray(data_a.X), a_before)
+    np.testing.assert_array_equal(np.asarray(data_b.X),
+                                  np.asarray(pack_cohort(pop, ids_b).X))
+    np.testing.assert_array_equal(sizes_b, pop.client_sizes(ids_b))
+    with pytest.raises(ValueError, match="static per run"):
+        packer.pack(np.asarray([1, 2]))
 
 
 # -- driver -----------------------------------------------------------------
@@ -237,6 +262,80 @@ def test_cohort_participation_reflects_budget_drops():
     sched = res.schedule.participation_counts(SPEC.m)
     assert res.participation.sum() < sched.sum()
     assert (res.participation <= sched).all()
+
+
+def test_cohort_pipeline_staleness0_bit_identical():
+    """The overlapped pipeline's parity contract: at staleness 0 every
+    block still launches from a fully-merged state, so any overlap depth is
+    bit-identical to the sequential block loop -- state, history,
+    participation, everything."""
+    pop = Population(SPEC, seed=0)
+    seq = run_mocha_cohort(pop, REG, _small_cfg(rounds=8, record_every=1))
+    for depth in (2, 4):
+        pipe = run_mocha_cohort(pop, REG, _small_cfg(
+            rounds=8, record_every=1, overlap=depth))
+        assert seq.history == pipe.history
+        np.testing.assert_array_equal(seq.centroids, pipe.centroids)
+        np.testing.assert_array_equal(seq.omega_k, pipe.omega_k)
+        np.testing.assert_array_equal(seq.assign, pipe.assign)
+        np.testing.assert_array_equal(seq.participation, pipe.participation)
+
+
+def test_cohort_pipeline_stale_merge_deterministic_and_bounded():
+    """staleness >= 1 lets a block launch from a state missing up to S
+    prior folds.  The inexactness is real (results move off the sequential
+    reference) but bounded and DETERMINISTIC: merge points are a pure
+    function of block counts, never thread timing, and staleness delays
+    merges without changing which clients run or how much budget they
+    execute."""
+    pop = Population(SPEC, seed=0)
+    cfg = _small_cfg(rounds=12, record_every=1, overlap=4, staleness=2)
+    a = run_mocha_cohort(pop, REG, cfg)
+    b = run_mocha_cohort(pop, REG, cfg)
+    assert a.history == b.history                 # run-to-run bitwise
+    np.testing.assert_array_equal(a.centroids, b.centroids)
+    np.testing.assert_array_equal(a.assign, b.assign)
+    seq = run_mocha_cohort(pop, REG, dataclasses.replace(
+        cfg, overlap=1, staleness=0))
+    # the stale launches genuinely read older state...
+    assert not np.array_equal(a.centroids, seq.centroids)
+    # ...but the schedule and executed budgets are untouched
+    np.testing.assert_array_equal(a.schedule.ids, seq.schedule.ids)
+    np.testing.assert_array_equal(a.participation, seq.participation)
+    # and the run still descends: bounded inexactness, not divergence
+    assert a.history["primal"][-1] < a.history["primal"][0]
+
+
+def test_cohort_participation_always_populated():
+    """Regression for the Optional annotation: _run_cohort always returns
+    a populated (m,) participation vector on every execution path."""
+    pop = Population(SPEC, seed=0)
+    for kw in ({}, {"overlap": 3}, {"overlap": 3, "staleness": 1}):
+        res = run_mocha_cohort(pop, REG, _small_cfg(rounds=3, **kw))
+        assert res.participation is not None
+        assert res.participation.shape == (SPEC.m,)
+        assert res.participation.sum() > 0
+
+
+def test_staleness_merger_orders_folds_and_bounds_launches():
+    """StalenessBoundedMerger: folds must arrive in schedule order, and a
+    block is admissible to launch iff at most S earlier blocks are still
+    unmerged."""
+    k, d, n_pad, cohort = 2, 4, 8, 3
+    state = ClusterOmega(m=10, k=k, d=d, reg=REG)
+    mg = StalenessBoundedMerger(state, REG, staleness=1)
+    assert mg.admissible(0) and mg.admissible(1) and not mg.admissible(2)
+    ids = np.arange(cohort)
+    W = np.zeros((cohort, d), np.float32)
+    alpha = np.zeros((cohort, n_pad), np.float32)
+    sizes = np.full(cohort, n_pad, np.int64)
+    part = np.ones(cohort, bool)
+    with pytest.raises(RuntimeError, match="out-of-order"):
+        mg.fold(1, ids, W, alpha, sizes, part)
+    mg.fold(0, ids, W, alpha, sizes, part)
+    assert mg.merged_through == 0 and mg.admissible(2)
+    with pytest.raises(ValueError, match="staleness"):
+        StalenessBoundedMerger(state, REG, staleness=-1)
 
 
 def test_cohort_full_participation_matches_run_mocha():

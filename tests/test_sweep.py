@@ -108,8 +108,9 @@ def test_sweep_per_shuffle_seeds(shuffles):
 
 def test_sweep_mixed_types_and_semi_sync_fall_back(shuffles):
     """Capability change (PR 5): grids the harness used to REJECT now
-    complete through the router's sequential fallback -- mixed regularizer
-    types and semi_sync clocks produce ordinary SweepResults."""
+    complete -- mixed regularizer types through the router's sequential
+    fallback, semi_sync clocks on the batched path itself (the caps fold
+    into the pre-sampled budgets; see test_api.py for the parity test)."""
     trains = stack_federations([tr for tr, _ in shuffles])
     cfg = MochaConfig(loss="hinge", rounds=2, record_every=2)
     mixed = run_sweep(trains, [MeanRegularized(lambda1=0.0, lambda2=1e-2),
