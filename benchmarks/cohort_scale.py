@@ -29,12 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import Dict, List, Tuple
 
 import repro.api as api
 from repro.cohort import Population, PopulationSpec
 from repro.core import BudgetConfig, Probabilistic, SystemsConfig
+from repro.utils.timing import tick
 
 #: heterogeneous hardware (4x clock-rate spread): without it the default
 #: rate_lo = rate_hi = 1.0 makes availability weights uniform and the
@@ -79,9 +79,9 @@ def _build(pop: Population, K: int, overlap: int,
 
 
 def _timed(exp: api.Experiment) -> Tuple[float, api.Report]:
-    t0 = time.perf_counter()
+    t0 = tick()
     report = exp.run(seed=0)
-    return time.perf_counter() - t0, report
+    return tick() - t0, report
 
 
 def _pair(m: int, K: int, rounds: int = ROUNDS) -> Tuple[Dict, Dict]:

@@ -14,7 +14,6 @@ import json
 import os
 import pathlib
 import sys
-import time
 
 # Expose every CPU core as an XLA host device BEFORE jax initializes: the
 # sweep harness (core/sweep.py) shards independent grid cells across devices,
@@ -80,18 +79,20 @@ def main() -> None:
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only}
 
+    from repro.utils.timing import tick
+
     all_rows = []
     failed = []
     print("name,us_per_call,derived")
     for name, mod in suites.items():
-        t0 = time.perf_counter()
+        t0 = tick()
         try:
             rows = mod.run(quick=quick)
         except Exception as e:  # noqa: BLE001
             print(f"{name},0,ERROR:{type(e).__name__}:{e}")
             failed.append(name)
             continue
-        wall_s = time.perf_counter() - t0
+        wall_s = tick() - t0
         # every BENCH row carries the shared provenance schema: rows that ran
         # through the experiment router recorded their own block (routed
         # driver, config hash); everything else gets the ambient one (the

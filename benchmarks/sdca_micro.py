@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Dict, List
 
 import jax
@@ -40,6 +39,7 @@ from repro.core.losses import get_loss
 from repro.core.subproblem import (_solver_plan,
                                    local_sdca_idx, row_norms)
 from repro.utils.jax_compat import fp_barrier
+from repro.utils.timing import tick
 
 ROOFLINE_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                             "roofline")
@@ -137,10 +137,10 @@ def _interleaved_times(fns: Dict, args, reps: int, iters: int) -> Dict:
     best = {k: float("inf") for k in fns}
     for _ in range(reps):
         for k, f in fns.items():
-            t0 = time.perf_counter()
+            t0 = tick()
             for _ in range(iters):
                 jax.block_until_ready(f(*args))
-            best[k] = min(best[k], (time.perf_counter() - t0) / iters)
+            best[k] = min(best[k], (tick() - t0) / iters)
     return best
 
 

@@ -219,6 +219,14 @@ class _BlockLoop:
     only; ``solve`` owns the shared ``SystemsTrace`` and runs on a single
     solve worker (or inline, sequentially) so the simulated clock advances
     in block order no matter how deep the pipeline is.
+
+    The split is a checked contract: mutable attributes carry an
+    ``# owner: pack|solve|main`` annotation and every stage method a
+    ``# worker:`` tag; ``tools/reprolint`` (rules T301/T302) rejects any
+    access that crosses the ownership line, so the PR-6 pipeline cannot
+    silently regress into a data race.  Unannotated attributes are
+    launch-time constants (read-only after ``__init__``, safe from any
+    thread).
     """
 
     def __init__(self, pop: Population, reg: Regularizer, cfg: CohortConfig):
@@ -226,10 +234,10 @@ class _BlockLoop:
         self.cfg, self.reg = cfg, reg
         self.n_pad = int(cfg.n_pad or spec.pad_width)
         self.state = ClusterOmega(m, cfg.clusters, spec.d, reg, eta=cfg.eta,
-                                  cache_clients=cfg.cache_clients)
+                                  cache_clients=cfg.cache_clients)  # owner: main
         self.merger = StalenessBoundedMerger(
             self.state, reg, omega_update_every=cfg.omega_update_every,
-            staleness=cfg.staleness)
+            staleness=cfg.staleness)  # owner: main
 
         # population hardware: one O(m) multiplier vector drives BOTH the
         # availability-weighted sampler and the per-block clock injection
@@ -244,19 +252,19 @@ class _BlockLoop:
         # the static per-slot rate draw is neutralized (rate_lo = rate_hi =
         # 1) and the sampled clients' multipliers are injected per block
         slot_cfg = dataclasses.replace(sys_cfg, rate_lo=1.0, rate_hi=1.0)
-        self.trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)
+        self.trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)  # owner: solve
 
         self.inner = cfg.inner_config()
-        self.packer = CohortPacker(pop, cfg.cohort, self.n_pad)
+        self.packer = CohortPacker(pop, cfg.cohort, self.n_pad)  # owner: pack
 
         self.record = _record_rounds(cfg.rounds, cfg.record_every)
         self.history: Dict[str, List[float]] = {
-            k: [] for k in COHORT_HISTORY_KEYS}
-        self.seen = np.zeros(m, bool)
-        self.n_seen = 0
-        self.participation = np.zeros(m, np.int64)
+            k: [] for k in COHORT_HISTORY_KEYS}  # owner: main
+        self.seen = np.zeros(m, bool)  # owner: main
+        self.n_seen = 0  # owner: main
+        self.participation = np.zeros(m, np.int64)  # owner: main
 
-    def launch_args(self, b: int):
+    def launch_args(self, b: int):  # worker: main
         """MAIN THREAD: block b's cohort + its launch-time state snapshot.
 
         The warm-start alpha rows and the expanded cohort Omega are read
@@ -268,7 +276,7 @@ class _BlockLoop:
                 self.state.cohort_omega(ids))
 
     def solve(self, b: int, data, ids, dropped, alpha0_np,
-              omega0) -> _SolvedBlock:
+              omega0) -> _SolvedBlock:  # worker: solve
         """SOLVE STAGE: block b's device program + host pulls.
 
         Strictly serial across blocks (inline or on the one-worker solve
@@ -298,7 +306,7 @@ class _BlockLoop:
             gap=res.final("gap"), elapsed_s=self.trace.elapsed_s)
 
     def fold(self, b: int, ids: np.ndarray, sizes: np.ndarray,
-             s: _SolvedBlock) -> None:
+             s: _SolvedBlock) -> None:  # worker: main
         """MAIN THREAD: fold block b (schedule order, via the merger)."""
         self.participation[ids[s.participated]] += 1
         self.merger.fold(b, ids, s.W, s.alpha, sizes, s.participated)
@@ -315,9 +323,11 @@ class _BlockLoop:
             h["round_max_steps"].append(s.max_steps)
             h["unique_clients"].append(self.n_seen)
 
-    def result(self) -> CohortRunResult:
+    def result(self) -> CohortRunResult:  # worker: main
         return CohortRunResult(
-            relationship=self.state, history=self.history, trace=self.trace,
+            relationship=self.state, history=self.history,
+            # solve-owned, but both pools have joined before result()
+            trace=self.trace,  # reprolint: ok T301
             schedule=self.schedule, rate_mult=self.rate_mult,
             participation=self.participation)
 

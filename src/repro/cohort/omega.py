@@ -45,26 +45,29 @@ class ClusterOmega:
         if k < 1:
             raise ValueError(f"need k >= 1 clusters, got {k}")
         self.m, self.k, self.d, self.eta = m, k, d, float(eta)
-        self.omega_k = np.asarray(reg.init_omega(k), np.float64)
-        self.centroids = np.zeros((k, d), np.float32)
-        self.counts = np.zeros(k, np.int64)      # client-round observations
+        # every mutable field below is fold-stage state: the overlapped
+        # pipeline touches it from the MAIN thread only (reprolint T301/T302
+        # check the ownership line; see repro.cohort.driver._BlockLoop)
+        self.omega_k = np.asarray(reg.init_omega(k), np.float64)  # owner: main
+        self.centroids = np.zeros((k, d), np.float32)  # owner: main
+        self.counts = np.zeros(k, np.int64)  # owner: main  (client-round obs)
         # deterministic balanced init; re-assignment is data-driven once
         # centroids warm up
-        self.assign = (np.arange(m, dtype=np.int64) % k).astype(np.int32)
+        self.assign = (np.arange(m, dtype=np.int64) % k).astype(np.int32)  # owner: main
         self.cache_clients = int(cache_clients)
         #: client id -> (alpha_t (n_t,) float32, w_delta (d,) float32)
         self._cache: "OrderedDict[int, Tuple[np.ndarray, np.ndarray]]" = (
-            OrderedDict())
+            OrderedDict())  # owner: main
 
     # -- cohort-facing views (all cohort-sized, never population-sized) -----
 
-    def cohort_omega(self, ids: np.ndarray) -> jnp.ndarray:
+    def cohort_omega(self, ids: np.ndarray) -> jnp.ndarray:  # worker: main
         """(K, K) expanded relationship block for a sampled cohort."""
         a = self.assign[np.asarray(ids, np.int64)]
         om = self.omega_k[np.ix_(a, a)] + self.eta * np.eye(len(a))
         return jnp.asarray(om, jnp.float32)
 
-    def cohort_alpha(self, ids: np.ndarray, n_pad: int) -> np.ndarray:
+    def cohort_alpha(self, ids: np.ndarray, n_pad: int) -> np.ndarray:  # worker: main
         """(K, n_pad) warm-start dual blocks: cached rows, zeros for fresh
         or evicted clients (an evicted client restarts cold -- SDCA loses
         the warm start, not correctness)."""
@@ -76,7 +79,7 @@ class ClusterOmega:
                 alpha[slot, :row.shape[0]] = row
         return alpha
 
-    def client_weights(self, ids: np.ndarray) -> np.ndarray:
+    def client_weights(self, ids: np.ndarray) -> np.ndarray:  # worker: main
         """(K, d) serving weights: centroid + cached personal delta.
 
         Defined for EVERY client -- never-sampled clients serve their
@@ -94,7 +97,7 @@ class ClusterOmega:
 
     def update(self, ids: np.ndarray, W_cohort: np.ndarray,
                alpha_cohort: np.ndarray, sizes: np.ndarray,
-               participated: np.ndarray) -> None:
+               participated: np.ndarray) -> None:  # worker: main
         """Fold one solved cohort back into the factored state.
 
         ``W_cohort`` (K, d) are the block's solved per-client weights,
@@ -145,7 +148,7 @@ class ClusterOmega:
         while len(self._cache) > self.cache_clients:
             self._cache.popitem(last=False)
 
-    def refresh_omega(self, reg: Regularizer) -> None:
+    def refresh_omega(self, reg: Regularizer) -> None:  # worker: main
         """The paper's central Omega step, in cluster space: k x k from the
         (k, d) centroid matrix, O(k^2 d) -- independent of m."""
         self.omega_k = np.asarray(
@@ -198,18 +201,18 @@ class StalenessBoundedMerger:
                  omega_update_every: int = 0, staleness: int = 0):
         if staleness < 0:
             raise ValueError(f"need staleness >= 0, got {staleness}")
-        self.state, self.reg = state, reg
+        self.state, self.reg = state, reg  # owner: main
         self.omega_update_every = int(omega_update_every)
         self.staleness = int(staleness)
-        self.merged_through = -1      # last folded block index
+        self.merged_through = -1  # owner: main  (last folded block index)
 
-    def admissible(self, block: int) -> bool:
+    def admissible(self, block: int) -> bool:  # worker: main
         """May ``block`` launch now?  (every block <= b - 1 - S folded)"""
         return self.merged_through >= block - 1 - self.staleness
 
     def fold(self, block: int, ids: np.ndarray, W_cohort: np.ndarray,
              alpha_cohort: np.ndarray, sizes: np.ndarray,
-             participated: np.ndarray) -> None:
+             participated: np.ndarray) -> None:  # worker: main
         """Fold block ``block``'s solved statistics into the shared state."""
         if block != self.merged_through + 1:
             raise RuntimeError(

@@ -47,7 +47,9 @@ class CohortPacker:
     device pull becomes a pure host derivation.
 
     NOT thread-safe across concurrent ``pack`` calls (one packer per
-    pipeline stage; the overlapped driver packs on a single worker).
+    pipeline stage; the overlapped driver packs on a single worker) -- the
+    staging buffers are ``# owner: pack`` and ``tools/reprolint`` (T301/
+    T302) rejects any access from outside pack-tagged functions.
     """
 
     def __init__(self, pop: Population, cohort: int,
@@ -56,11 +58,11 @@ class CohortPacker:
         self.n_pad = int(n_pad or pop.spec.pad_width)
         self.cohort = int(cohort)
         d = pop.spec.d
-        self._X = np.zeros((self.cohort, self.n_pad, d), np.float32)
-        self._y = np.zeros((self.cohort, self.n_pad), np.float32)
-        self._mask = np.zeros((self.cohort, self.n_pad), np.float32)
+        self._X = np.zeros((self.cohort, self.n_pad, d), np.float32)  # owner: pack
+        self._y = np.zeros((self.cohort, self.n_pad), np.float32)  # owner: pack
+        self._mask = np.zeros((self.cohort, self.n_pad), np.float32)  # owner: pack
 
-    def pack(self, ids: Sequence[int]) -> Tuple[FederatedData, np.ndarray]:
+    def pack(self, ids: Sequence[int]) -> Tuple[FederatedData, np.ndarray]:  # worker: pack
         """(m=K federation, (K,) int64 true sizes) for cohort ``ids``."""
         if len(ids) != self.cohort:
             raise ValueError(

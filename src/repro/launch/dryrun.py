@@ -23,7 +23,6 @@ Usage:
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -32,6 +31,7 @@ from repro.configs.archs import ALL_ARCHS
 from repro.configs.shapes import SHAPES
 from repro.launch.mesh import make_production_mesh
 from repro.launch.hlo_stats import collective_bytes
+from repro.utils.timing import tick
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -50,7 +50,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
     from repro.launch.specs import build_case  # after XLA_FLAGS
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
               "status": "error"}
-    t0 = time.time()
+    t0 = tick()
     try:
         from repro.utils.pjit_utils import activation_sharding
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -63,9 +63,9 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                              out_shardings=case["out_shardings"],
                              donate_argnums=case["donate"])
             lowered = jitted.lower(*case["args"])
-            t_lower = time.time()
+            t_lower = tick()
             compiled = lowered.compile()
-            t_compile = time.time()
+            t_compile = tick()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
         coll = collective_bytes(compiled.as_text())
@@ -92,7 +92,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
         record["error"] = f"{type(e).__name__}: {e}"
         record["traceback"] = traceback.format_exc()[-4000:]
         print(f"[dryrun] FAIL {tag}: {record['error'][:200]}")
-    record["total_s"] = time.time() - t0
+    record["total_s"] = tick() - t0
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
     return record

@@ -11,12 +11,12 @@ for a Table-2-scale federation padded to the shard count.
 """
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.launch.hlo_stats import collective_bytes
+from repro.utils.timing import tick
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -51,7 +51,7 @@ def main() -> None:
                                  FederatedData(X, y, mask), alpha, v, K, q,
                                  budgets, 1.0, keys, comm_dtype=comm)
 
-    t0 = time.time()
+    t0 = tick()
     with mesh:
         lowered = jax.jit(step).lower(
             sds((m, n, d), f32), sds((m, n), f32), sds((m, n), f32),
@@ -65,7 +65,7 @@ def main() -> None:
         "kind": "mocha_federated_round", "m": m, "n": n, "d": d,
         "steps": args.steps, "bf16_wire": args.bf16_wire, "mesh": "data256",
         "status": "ok",
-        "compile_s": time.time() - t0,
+        "compile_s": tick() - t0,
         "memory": {"argument_bytes": mem.argument_size_in_bytes,
                    "temp_bytes": mem.temp_size_in_bytes},
         "cost": {"flops": cost.get("flops")},

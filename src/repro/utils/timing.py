@@ -1,0 +1,47 @@
+"""THE sanctioned wall-clock access point (reprolint rule D101).
+
+The repo's correctness story rests on a hard separation between two clocks:
+
+  * the SIMULATED federated clock (``core.systems_model.SystemsTrace``) --
+    the only time source any *result* (history columns, BENCH derived
+    metrics, traces) may depend on; it is a pure function of config seeds,
+    so runs are bit-reproducible;
+  * the REAL wall clock -- legitimate only for measuring the implementation
+    itself (benchmark wall times, compile-time probes), never for anything
+    a result row derives from.
+
+Routing every real-clock read through this module makes that separation
+mechanical: ``tools/reprolint`` bans direct ``time.time()`` /
+``time.perf_counter()`` calls everywhere under ``src/repro`` and
+``benchmarks`` except here, so a wall-clock read leaking into a simulated
+quantity cannot land silently.  Keep this module free of any logic beyond
+reading the clock -- anything more belongs at the call site, where the lint
+can see it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Tuple
+
+__all__ = ["tick", "timed"]
+
+
+def tick() -> float:
+    """One monotonic wall-clock read (seconds); differences only.
+
+    Monotonic by design: sanctioned readings time *durations* (benchmark
+    reps, compile phases), so absolute epoch time -- which would also leak
+    host identity into artifacts -- is deliberately unavailable here.
+    """
+    return time.perf_counter()
+
+
+def timed(fn: Callable[..., Any], *args: Any, **kw: Any) -> Tuple[Any, float]:
+    """``(fn(*args, **kw), elapsed_microseconds)`` of one call.
+
+    NOTE: does not block on async dispatch; JAX callers must make ``fn``
+    itself synchronize (``jax.block_until_ready``) for honest timings.
+    """
+    t0 = tick()
+    out = fn(*args, **kw)
+    return out, (tick() - t0) * 1e6

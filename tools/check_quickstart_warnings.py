@@ -1,53 +1,19 @@
 #!/usr/bin/env python
-"""CI gate: run examples/quickstart.py and FAIL on any DeprecationWarning
-raised from first-party code paths.
+"""Thin shim over ``tools.reprolint.quickstart`` (rule W401).
 
-The legacy entry points (``run_mocha`` & co.) are deprecated shims over
-``repro.api.Experiment``; first-party code -- the quickstart, the api
-execution paths it exercises, and everything they import -- must not route
-through them.  Third-party DeprecationWarnings (jax/numpy churn) are outside
-our control and are reported but not fatal.
+Kept for muscle memory / old CI configs; the real gate now lives in
+reprolint:
 
-    PYTHONPATH=src python tools/check_quickstart_warnings.py
+    PYTHONPATH=src python -m tools.reprolint --quickstart
 """
 from __future__ import annotations
 
 import pathlib
-import runpy
 import sys
-import warnings
 
-ROOT = pathlib.Path(__file__).resolve().parents[1]
-TARGET = ROOT / "examples" / "quickstart.py"
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-
-def main() -> int:
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        runpy.run_path(str(TARGET), run_name="__main__")
-    first_party = []
-    for w in caught:
-        if not issubclass(w.category, DeprecationWarning):
-            continue
-        where = f"{w.filename}:{w.lineno}: {w.message}"
-        resolved = str(pathlib.Path(w.filename).resolve())
-        # a repo-local virtualenv still lives under ROOT; installed packages
-        # are never first-party code
-        vendored = ("site-packages" in resolved or "dist-packages" in resolved)
-        if str(ROOT) in resolved and not vendored:
-            first_party.append(where)
-        else:
-            print(f"note: third-party DeprecationWarning ({where})")
-    if first_party:
-        print("FAIL: DeprecationWarning raised from first-party code paths "
-              "(route through repro.api.Experiment instead):",
-              file=sys.stderr)
-        for line in first_party:
-            print(f"  {line}", file=sys.stderr)
-        return 1
-    print("quickstart clean: no first-party DeprecationWarnings")
-    return 0
-
+from tools.reprolint.quickstart import main  # noqa: E402
 
 if __name__ == "__main__":
     sys.exit(main())

@@ -1,0 +1,165 @@
+"""reprolint CLI.
+
+    PYTHONPATH=src python -m tools.reprolint src/repro tools benchmarks
+
+Static pass (D/P/T/U families, stdlib-only, sub-second, never imports
+jax) over the given files/directories; exits 1 on any finding not in the
+baseline.  ``--quickstart`` additionally (or, with no paths, exclusively)
+runs the dynamic W401 quickstart-deprecation gate, which executes
+``examples/quickstart.py`` and therefore imports jax.
+
+    --write-baseline   accept the current findings as the new baseline
+    --report F.json    machine-readable findings report (CI artifact)
+    --list-rules       print the rule table and exit
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from tools.reprolint import baseline as baseline_mod
+from tools.reprolint import graph, quickstart
+from tools.reprolint.findings import Finding
+from tools.reprolint.rules import ALL_RULES, lint_file
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.txt"
+
+BASELINE_HEADER = (
+    "reprolint baseline: accepted findings (tab-separated fingerprints:\n"
+    "rule / path / context / snippet -- no line numbers, so unrelated\n"
+    "edits never churn this file).  Regenerate with --write-baseline;\n"
+    "entries here should only ever be REMOVED as violations get fixed.\n"
+    "U501 entries are test/launch-only modules, reachable from the tier-1\n"
+    "suite and repro.launch but deliberately not from the repro.api\n"
+    "surface -- kept, with this justification.")
+
+
+def _iter_py_files(paths: List[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            out.extend(sorted(
+                f for f in p.rglob("*.py")
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts)))
+    return out
+
+
+def run_paths(root: Path, paths: List[Path],
+              run_quickstart: bool = False) -> List[Finding]:
+    """All (non-inline-suppressed) findings for ``paths`` under ``root``."""
+    files = _iter_py_files(paths)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_file(root, f))
+    scanned = set()
+    for f in files:
+        try:
+            scanned.add(f.resolve().relative_to(root.resolve()).as_posix())
+        except ValueError:
+            pass
+    if any(rel.startswith("src/repro/") for rel in scanned):
+        findings.extend(f for f in graph.check_unreachable(root)
+                        if f.path in scanned)
+    if run_quickstart:
+        w_findings, notes = quickstart.check_quickstart(root)
+        for note in notes:
+            print(f"note: third-party DeprecationWarning ({note})")
+        findings.extend(w_findings)
+    return findings
+
+
+def _list_rules() -> None:
+    rows = [(r.id, type(r).__name__, r.summary) for r in ALL_RULES]
+    rows.append((graph.RULE_ID, "ApiUnreachableModule",
+                 "configs/models module unreachable from repro.api"))
+    rows.append((quickstart.RULE_ID, "QuickstartDeprecation",
+                 "first-party DeprecationWarning from the quickstart "
+                 "(dynamic; --quickstart)"))
+    for rid, name, summary in rows:
+        print(f"{rid}  {name}: {summary}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST contract checker for the repo's determinism, "
+                    "parity and thread-ownership invariants")
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: this checkout)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE.name} "
+                         "next to the package)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings as the new baseline")
+    ap.add_argument("--report", default=None, metavar="F.json",
+                    help="write a machine-readable findings report")
+    ap.add_argument("--quickstart", action="store_true",
+                    help="also run the dynamic W401 quickstart gate "
+                         "(imports jax)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        _list_rules()
+        return 0
+
+    root = Path(args.root).resolve() if args.root else REPO_ROOT
+    if not args.paths and not args.quickstart:
+        ap.error("no paths given (and --quickstart not set)")
+    paths = [Path(p) for p in args.paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        ap.error(f"no such path: {', '.join(map(str, missing))}")
+
+    findings = run_paths(root, paths, run_quickstart=args.quickstart)
+
+    baseline_path = (Path(args.baseline) if args.baseline
+                     else DEFAULT_BASELINE)
+    if args.write_baseline:
+        baseline_mod.save(baseline_path, findings, header=BASELINE_HEADER)
+        print(f"wrote {len(findings)} baseline entries to {baseline_path}")
+        return 0
+
+    # only rules this invocation actually ran can judge baseline entries
+    # stale: a quickstart-only run must not report the static entries
+    exercised = set()
+    if args.paths:
+        exercised.update(r.id for r in ALL_RULES)
+        exercised.add(graph.RULE_ID)
+    if args.quickstart:
+        exercised.add(quickstart.RULE_ID)
+    known = baseline_mod.load(baseline_path)
+    known = type(known)({fp: n for fp, n in known.items()
+                         if fp[0] in exercised})
+    new, old, stale = baseline_mod.split(findings, known)
+
+    if args.report:
+        Path(args.report).write_text(json.dumps({
+            "new": [f.as_dict() for f in new],
+            "baselined": [f.as_dict() for f in old],
+            "stale_baseline": ["\t".join(fp) for fp in stale],
+        }, indent=2) + "\n")
+
+    for fp in stale:
+        print("warning: stale baseline entry (violation fixed? remove the "
+              f"line): {' | '.join(fp)}")
+    for f in new:
+        print(f.render())
+    kinds = sorted({f.rule for f in new})
+    print(f"reprolint: {len(new)} new finding(s)"
+          + (f" [{', '.join(kinds)}]" if kinds else "")
+          + f", {len(old)} baselined, {len(stale)} stale baseline entr"
+          + ("ies" if len(stale) != 1 else "y"))
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+"""Baseline file: known, accepted findings that do not fail the build.
+
+Format: one finding per line, tab-separated fingerprint fields
+
+    rule<TAB>path<TAB>context<TAB>snippet
+
+(``#`` comment lines and blank lines allowed).  The fingerprint carries no
+line numbers, so unrelated edits never churn it.  Matching is multiset:
+two identical violations need two baseline entries.  Entries that no
+longer match anything are reported so the baseline only ever shrinks by
+someone noticing.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+from tools.reprolint.findings import Finding
+
+Fingerprint = Tuple[str, str, str, str]
+
+
+def load(path: Path) -> Counter:
+    """Multiset of baselined fingerprints (empty if no file)."""
+    out: Counter = Counter()
+    if not path.is_file():
+        return out
+    for raw in path.read_text().splitlines():
+        line = raw.rstrip("\n")
+        if not line.strip() or line.lstrip().startswith("#"):
+            continue
+        parts = line.split("\t")
+        if len(parts) != 4:
+            raise ValueError(
+                f"{path}: malformed baseline line (need 4 tab-separated "
+                f"fields): {line!r}")
+        out[tuple(parts)] += 1
+    return out
+
+
+def save(path: Path, findings: Iterable[Finding], header: str = "") -> None:
+    lines: List[str] = []
+    if header:
+        lines.extend(f"# {ln}" for ln in header.splitlines())
+    for f in sorted(findings, key=lambda f: f.fingerprint()):
+        lines.append("\t".join(f.fingerprint()))
+    path.write_text("\n".join(lines) + "\n")
+
+
+def split(findings: Iterable[Finding], baselined: Counter
+          ) -> Tuple[List[Finding], List[Finding], List[Fingerprint]]:
+    """(new, suppressed-by-baseline, stale-baseline-entries)."""
+    remaining = Counter(baselined)
+    new: List[Finding] = []
+    old: List[Finding] = []
+    for f in findings:
+        fp = f.fingerprint()
+        if remaining[fp] > 0:
+            remaining[fp] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    stale = sorted(remaining.elements())
+    return new, old, stale

@@ -1,0 +1,40 @@
+"""Finding record + stable fingerprinting for the baseline file.
+
+A finding's identity is (rule, repo-relative path, enclosing qualname,
+stripped source line) -- NOT the line number, so reordering or growing a
+file does not churn the baseline; only touching the flagged line (or
+moving it between functions) does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str       #: rule ID, e.g. ``D101``
+    path: str       #: repo-relative posix path
+    line: int       #: 1-based line of the offending node
+    message: str    #: what is wrong
+    context: str    #: enclosing qualname (``Class.method``) or ``<module>``
+    snippet: str    #: the offending source line, stripped
+    hint: str = ""  #: how to fix it
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        """Line-number-free identity used for baseline matching."""
+        return (self.rule, self.path, self.context, self.snippet)
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}"
+        out = f"{loc}: {self.rule} {self.message} [in {self.context}]"
+        if self.snippet:
+            out += f"\n    {self.snippet}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)

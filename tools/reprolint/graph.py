@@ -1,0 +1,114 @@
+"""U501: modules under ``configs``/``models`` unreachable from ``repro.api``.
+
+Builds the static import graph of the whole ``src/repro`` tree (edges from
+``import``/``from-import`` statements anywhere in a module, including
+function-level lazy imports, with relative imports resolved) and BFSes
+from the public surface ``repro.api``.  Importing ``a.b.c`` executes the
+``a`` and ``a.b`` package inits too, so every dotted prefix is an edge.
+
+Unreachable modules in the two sweep-target subtrees are reported; they
+are either dead (delete) or test/launch-only (baseline with that
+justification).  Scope is limited to ``configs``/``models`` on purpose:
+other subtrees (e.g. ``launch``, ``serve``) are entry points in their own
+right and unreachability from ``repro.api`` is not a defect there.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Set
+
+from tools.reprolint.findings import Finding
+
+RULE_ID = "U501"
+HINT = ("wire the module into the repro.api surface, delete it, or "
+        "baseline it with a test/launch-only justification")
+
+ROOTS = ("repro", "repro.api")
+SWEEP_PREFIXES = ("repro.configs", "repro.models")
+
+
+def _modules(src: Path) -> Dict[str, Path]:
+    """Dotted module name -> file, for every module under src/repro."""
+    out: Dict[str, Path] = {}
+    for p in sorted((src / "repro").rglob("*.py")):
+        parts = list(p.relative_to(src).with_suffix("").parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        out[".".join(parts)] = p
+    return out
+
+
+def _add_edges(edges: Set[str], dotted: str, modules: Dict[str, Path]) -> None:
+    """Edge to ``dotted`` plus every package-prefix init that exists."""
+    parts = dotted.split(".")
+    for i in range(1, len(parts) + 1):
+        prefix = ".".join(parts[:i])
+        if prefix in modules:
+            edges.add(prefix)
+
+
+def import_graph(src: Path) -> Dict[str, Set[str]]:
+    modules = _modules(src)
+    graph: Dict[str, Set[str]] = {name: set() for name in modules}
+    for name, path in modules.items():
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError:
+            continue
+        pkg = name if path.name == "__init__.py" else name.rsplit(".", 1)[0]
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    _add_edges(graph[name], a.name, modules)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    anchor = pkg.split(".")
+                    anchor = anchor[:len(anchor) - (node.level - 1)]
+                    base = ".".join(anchor + ([node.module]
+                                              if node.module else []))
+                else:
+                    base = node.module or ""
+                if not base:
+                    continue
+                _add_edges(graph[name], base, modules)
+                for a in node.names:
+                    if a.name != "*" and f"{base}.{a.name}" in modules:
+                        _add_edges(graph[name], f"{base}.{a.name}", modules)
+    return graph
+
+
+def reachable_from(graph: Dict[str, Set[str]],
+                   roots: Iterable[str] = ROOTS) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in graph]
+    while stack:
+        cur = stack.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        stack.extend(graph[cur] - seen)
+    return seen
+
+
+def check_unreachable(root: Path) -> List[Finding]:
+    """U501 findings for the repo rooted at ``root`` (expects src/repro)."""
+    src = root / "src"
+    if not (src / "repro").is_dir():
+        return []
+    modules = _modules(src)
+    graph = import_graph(src)
+    seen = reachable_from(graph)
+    out: List[Finding] = []
+    for name in sorted(modules):
+        if name in seen:
+            continue
+        if not any(name == p or name.startswith(p + ".")
+                   for p in SWEEP_PREFIXES):
+            continue
+        rel = modules[name].resolve().relative_to(root.resolve()).as_posix()
+        out.append(Finding(
+            rule=RULE_ID, path=rel, line=1,
+            message=f"module `{name}` is unreachable from repro.api",
+            context="<module>", snippet=name, hint=HINT))
+    return out

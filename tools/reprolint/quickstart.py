@@ -1,0 +1,81 @@
+"""W401: quickstart must raise no first-party DeprecationWarnings.
+
+The one dynamic reprolint rule (it executes ``examples/quickstart.py``
+under a recording warnings filter, so it imports jax and takes seconds --
+hence opt-in via ``--quickstart`` rather than part of the static pass).
+The legacy entry points (``run_mocha`` & co.) are deprecated shims over
+``repro.api.Experiment``; first-party code -- the quickstart, the api
+execution paths it exercises, and everything they import -- must not
+route through them.  Third-party DeprecationWarnings (jax/numpy churn)
+are outside our control: reported as notes, never fatal.
+
+``tools/check_quickstart_warnings.py`` is the backward-compatible shim
+over this module.
+"""
+from __future__ import annotations
+
+import pathlib
+import runpy
+import sys
+import warnings
+from typing import List, Optional, Tuple
+
+from tools.reprolint.findings import Finding
+
+RULE_ID = "W401"
+HINT = "route through repro.api.Experiment instead of the legacy shims"
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def check_quickstart(root: pathlib.Path = REPO_ROOT,
+                     target: Optional[pathlib.Path] = None,
+                     ) -> Tuple[List[Finding], List[str]]:
+    """(first-party DeprecationWarning findings, third-party notes)."""
+    target = target or (root / "examples" / "quickstart.py")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        runpy.run_path(str(target), run_name="__main__")
+    findings: List[Finding] = []
+    notes: List[str] = []
+    for w in caught:
+        if not issubclass(w.category, DeprecationWarning):
+            continue
+        resolved = pathlib.Path(w.filename).resolve()
+        # a repo-local virtualenv still lives under root; installed packages
+        # are never first-party code
+        vendored = ("site-packages" in str(resolved)
+                    or "dist-packages" in str(resolved))
+        try:
+            rel = resolved.relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = None
+        if rel is not None and not vendored:
+            findings.append(Finding(
+                rule=RULE_ID, path=rel, line=w.lineno,
+                message="first-party DeprecationWarning from the quickstart "
+                        "path", context="<quickstart>",
+                snippet=str(w.message), hint=HINT))
+        else:
+            notes.append(f"{w.filename}:{w.lineno}: {w.message}")
+    return findings, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """Standalone gate (what check_quickstart_warnings.py always did)."""
+    findings, notes = check_quickstart()
+    for note in notes:
+        print(f"note: third-party DeprecationWarning ({note})")
+    if findings:
+        print("FAIL: DeprecationWarning raised from first-party code paths "
+              "(route through repro.api.Experiment instead):",
+              file=sys.stderr)
+        for f in findings:
+            print(f"  {f.path}:{f.line}: {f.snippet}", file=sys.stderr)
+        return 1
+    print("quickstart clean: no first-party DeprecationWarnings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
