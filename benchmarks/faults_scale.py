@@ -1,0 +1,199 @@
+"""Fault-tolerance benchmark: convergence gap + blocks/sec vs injected
+fault rate, and checkpoint/resume overhead vs the uninterrupted run.
+
+Three claims of the resilience layer (repro.cohort.resilience), each with
+a hard gate:
+
+  * DEGRADATION STAYS IN ENVELOPE -- with per-attempt fault rate f and
+    graceful degradation, the run completes and its final primal objective
+    stays within ``ENVELOPE`` of the fault-free reference (the Fig-3
+    story: dropped work is one more bounded-inexactness source, not a
+    divergence).  Rows record blocks/sec, the convergence gap vs f = 0,
+    and the retry/degraded counts (also stamped in provenance).
+  * ZERO-FAULT PATH IS FREE -- a zero-probability FaultPlan with retries
+    armed must reproduce the plain run's history BIT-identically (the
+    wrappers reduce to the bare pack/solve calls).
+  * RESUME IS CHEAP AND EXACT -- a run hard-crashed at ``CRASH_BLOCK``
+    (injected unretryable fault) and resumed from its checkpoints must
+    match the uninterrupted history BIT-identically, with
+    crash + resume wall-clock within ``RESUME_OVERHEAD_MAX`` of the
+    uninterrupted wall-clock (the row records the measured ratio).
+
+Writes ``BENCH_faults.json`` via benchmarks/run.py (suite ``faults``).
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+import repro.api as api
+from repro.cohort import BlockFailure, FaultConfig, Population, PopulationSpec
+from repro.core import BudgetConfig, Probabilistic, SystemsConfig
+from repro.utils.timing import tick
+
+SYSTEMS = SystemsConfig(network="lte", rate_lo=0.5, rate_hi=2.0)
+
+SPEC = PopulationSpec("faults_bench", m=2000, d=16, n_min=16, n_max=48,
+                      clusters=3)
+
+ROUNDS = 10
+COHORT = 32
+MAX_RETRIES = 2
+
+#: per-attempt injected fault rates (solve; pack runs at half of each) --
+#: f = 0.25 is the acceptance-criteria point
+QUICK_F = (0.0, 0.1, 0.25)
+FULL_F = (0.0, 0.05, 0.1, 0.25)
+
+#: relative final-primal drift allowed under injected faults + degradation
+#: (the Fig-3 envelope: degraded blocks drop work, they must not derail)
+ENVELOPE = 0.10
+
+#: crash + resume wall-clock vs uninterrupted, upper gate.  Resume re-pays
+#: the jax program compile and re-solves the in-flight block, so the sum
+#: of the two partial runs is bounded well under 2x of one full run + a
+#: compile; generous because the quick run is seconds long
+RESUME_OVERHEAD_MAX = 3.0
+
+CRASH_BLOCK = 6
+CHECKPOINT_EVERY = 2
+
+
+def _build(pop: Population, faults: Optional[FaultConfig] = None,
+           max_retries: int = 0, degrade: bool = False,
+           checkpoint_every: int = 0, checkpoint_dir: Optional[str] = None,
+           resume: bool = False) -> api.Experiment:
+    reg = Probabilistic(lam=1e-2, sigma2=10.0)
+    return api.Experiment(
+        problem=api.Problem(population=pop),
+        method=api.Method(loss="hinge", regularizers=(reg,), rounds=ROUNDS,
+                          budget=BudgetConfig(passes=1.0)),
+        systems=api.Systems(config=SYSTEMS, dropout=0.1, faults=faults),
+        exec=api.Exec(cohort=COHORT, clusters=SPEC.clusters,
+                      max_retries=max_retries, degrade=degrade,
+                      checkpoint_every=checkpoint_every,
+                      checkpoint_dir=checkpoint_dir, resume=resume),
+        eval=api.Eval(record_every=1))
+
+
+def _timed(exp: api.Experiment) -> Tuple[float, api.Report]:
+    t0 = tick()
+    report = exp.run(seed=0)
+    return tick() - t0, report
+
+
+def _fault_row(pop: Population, f: float, ref: api.Report,
+               ref_wall: float) -> Dict:
+    faults = FaultConfig(solve_fail_prob=f, pack_fail_prob=f / 2,
+                         fold_delay_prob=f, fold_delay_s=2.0)
+    exp = _build(pop, faults=faults, max_retries=MAX_RETRIES, degrade=True)
+    _timed(exp)                      # warm the compiled block program
+    wall, report = _timed(exp)
+    ref_primal = ref.final("primal")
+    primal = report.final("primal")
+    gap = abs(primal - ref_primal) / max(abs(ref_primal), 1.0)
+    if gap > ENVELOPE:
+        raise RuntimeError(
+            f"fault rate f={f}: final primal {primal:.6g} drifted "
+            f"{gap:.3f} (> {ENVELOPE}) from fault-free {ref_primal:.6g} "
+            "-- degradation broke the convergence envelope")
+    prov = report.provenance
+    if f == 0.0 and report.history != ref.history:
+        raise RuntimeError(
+            "zero-probability FaultPlan changed the run history -- the "
+            "zero-fault path must be bit-identical to the plain driver")
+    return {
+        "bench": "faults", "fault_rate": f, "m": SPEC.m, "K": COHORT,
+        "rounds": ROUNDS, "max_retries": MAX_RETRIES,
+        "us_per_call": wall / ROUNDS * 1e6,        # one cohort block
+        "blocks_per_s": ROUNDS / wall,
+        "blocks_per_s_vs_clean": (ROUNDS / wall) / (ROUNDS / ref_wall),
+        "final_primal": primal, "convergence_gap": gap,
+        "sim_elapsed_s": report.final("time"),
+        "retries": prov["retries"],
+        "degraded_blocks": prov["degraded_blocks"],
+        "provenance": dict(prov),
+    }
+
+
+def _degraded_row(pop: Population, ref: api.Report) -> Dict:
+    """Force degradation deterministically: two hard-fault blocks exhaust
+    retries and fold as dropped cohorts; the envelope gate must still hold."""
+    dead = (3, 7)
+    faults = FaultConfig(solve_fail_blocks=dead)
+    exp = _build(pop, faults=faults, max_retries=1, degrade=True)
+    wall, report = _timed(exp)
+    ref_primal = ref.final("primal")
+    primal = report.final("primal")
+    gap = abs(primal - ref_primal) / max(abs(ref_primal), 1.0)
+    if gap > ENVELOPE:
+        raise RuntimeError(
+            f"{len(dead)} degraded blocks drifted the final primal "
+            f"{gap:.3f} (> {ENVELOPE}) from fault-free {ref_primal:.6g}")
+    prov = report.provenance
+    if prov["degraded_blocks"] != len(dead):
+        raise RuntimeError(
+            f"expected {len(dead)} degraded blocks, provenance says "
+            f"{prov['degraded_blocks']}")
+    return {
+        "bench": "faults", "fault_rate": "hard-degrade", "m": SPEC.m,
+        "K": COHORT, "rounds": ROUNDS, "max_retries": 1,
+        "dead_blocks": list(dead), "us_per_call": wall / ROUNDS * 1e6,
+        "final_primal": primal, "convergence_gap": gap,
+        "retries": prov["retries"],
+        "degraded_blocks": prov["degraded_blocks"],
+        "provenance": dict(prov),
+    }
+
+
+def _resume_row(pop: Population, ref: api.Report, ref_wall: float) -> Dict:
+    """Crash at CRASH_BLOCK (hard injected fault), resume, compare."""
+    with tempfile.TemporaryDirectory() as ckdir:
+        crash_exp = _build(
+            pop, faults=FaultConfig(solve_fail_blocks=(CRASH_BLOCK,)),
+            checkpoint_every=CHECKPOINT_EVERY, checkpoint_dir=ckdir)
+        t0 = tick()
+        try:
+            crash_exp.run(seed=0)
+            raise RuntimeError(
+                f"hard fault at block {CRASH_BLOCK} did not crash the run")
+        except BlockFailure:
+            pass
+        crash_wall = tick() - t0
+        resume_exp = _build(pop, checkpoint_every=CHECKPOINT_EVERY,
+                            checkpoint_dir=ckdir, resume=True)
+        resume_wall, report = _timed(resume_exp)
+    if report.history != ref.history:
+        raise RuntimeError(
+            "resumed history differs from the uninterrupted run -- "
+            "checkpoint/resume broke bit-identity")
+    overhead = (crash_wall + resume_wall) / ref_wall
+    if overhead > RESUME_OVERHEAD_MAX:
+        raise RuntimeError(
+            f"crash+resume cost {overhead:.2f}x the uninterrupted run "
+            f"(> {RESUME_OVERHEAD_MAX}x): checkpointing is too expensive")
+    return {
+        "bench": "faults", "fault_rate": "crash+resume", "m": SPEC.m,
+        "K": COHORT, "rounds": ROUNDS, "crash_block": CRASH_BLOCK,
+        "checkpoint_every": CHECKPOINT_EVERY,
+        "us_per_call": (crash_wall + resume_wall) / ROUNDS * 1e6,
+        "crash_wall_s": crash_wall, "resume_wall_s": resume_wall,
+        "uninterrupted_wall_s": ref_wall, "resume_overhead": overhead,
+        "resumed_from": int(report.result.resumed_from),
+        "bit_identical": True,
+        "retries": report.provenance["retries"],
+        "degraded_blocks": report.provenance["degraded_blocks"],
+        "provenance": dict(report.provenance),
+    }
+
+
+def run(quick: bool = True) -> List[Dict]:
+    pop = Population(SPEC, seed=0)
+    clean = _build(pop)
+    _timed(clean)                    # compile + presample warm-up
+    ref_wall, ref = _timed(clean)
+    rows = [_fault_row(pop, f, ref, ref_wall)
+            for f in (QUICK_F if quick else FULL_F)]
+    rows.append(_degraded_row(pop, ref))
+    rows.append(_resume_row(pop, ref, ref_wall))
+    return rows

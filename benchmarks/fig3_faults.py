@@ -43,6 +43,7 @@ def run(quick: bool = True):
             record_every=rounds))
     rows.append({
         "bench": "fig3", "drop_prob": 1.0,
+        "provenance": dead.provenance,
         "primal_gap_vs_ref": dead.final("primal") - p_ref,
         "wrong_solution": dead.final("primal") > p_ref + 1e-3,
     })

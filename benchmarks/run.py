@@ -64,9 +64,10 @@ def main() -> None:
                       str(json_dir / ".jax_cache"))
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
 
-    from benchmarks import (cohort_scale, convergence, fig1_stragglers,
-                            fig2_systems, fig3_faults, roofline_report,
-                            sdca_micro, table1_mtl, table4_skew)
+    from benchmarks import (cohort_scale, convergence, faults_scale,
+                            fig1_stragglers, fig2_systems, fig3_faults,
+                            roofline_report, sdca_micro, table1_mtl,
+                            table4_skew)
     suites = {
         "table1": table1_mtl, "table4": table4_skew,
         "fig1": fig1_stragglers, "fig2": fig2_systems, "fig3": fig3_faults,
@@ -74,7 +75,7 @@ def main() -> None:
         # sdca before roofline: it emits the results/roofline artifacts the
         # report consumes (real HLO FLOP/byte rows)
         "sdca": sdca_micro, "roofline": roofline_report,
-        "cohort": cohort_scale,
+        "cohort": cohort_scale, "faults": faults_scale,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only}

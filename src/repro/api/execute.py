@@ -41,7 +41,8 @@ def base_provenance() -> Dict[str, Any]:
     return {"path": None, "driver": None, "engine": None,
             "fallback_reason": None, "gram_max_d": int(active_gram_max_d()),
             "gram_mode": None, "config_hash": None,
-            "backend": jax.default_backend()}
+            "backend": jax.default_backend(),
+            "retries": None, "degraded_blocks": None}
 
 
 def _provenance(exp: Experiment, plan: RoutePlan) -> Dict[str, Any]:
@@ -59,6 +60,10 @@ def _provenance(exp: Experiment, plan: RoutePlan) -> Dict[str, Any]:
         "gram_mode": "gram" if exp.problem.d <= int(resolved) else "carry",
         "config_hash": config_fingerprint(exp),
         "backend": jax.default_backend(),
+        # fault accounting: only the cohort path retries/degrades; its
+        # runner overwrites these from the run's FaultStats
+        "retries": None,
+        "degraded_blocks": None,
     }
 
 
@@ -201,5 +206,8 @@ def _run_cohort_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
             exp.problem.population, res.relationship,
             get_loss(exp.method.loss), exp.eval.holdout_clients, seed=s,
             participation=res.participation, metrics=exp.eval.metrics)
-    return Report(result=res, provenance=_provenance(exp, plan),
-                  evaluation=evaluation)
+    prov = _provenance(exp, plan)
+    if res.fault_stats is not None:
+        prov["retries"] = int(res.fault_stats.retries)
+        prov["degraded_blocks"] = int(res.fault_stats.degraded_blocks)
+    return Report(result=res, provenance=prov, evaluation=evaluation)

@@ -16,8 +16,11 @@ from typing import Any, Dict, Optional
 from repro.core.evaluate import EvalReport
 
 #: keys every provenance block carries (pinned by tests/test_api_surface.py)
+#: -- retries/degraded_blocks are the fault accounting (None outside the
+#: cohort path, which is the only one that retries/degrades)
 PROVENANCE_KEYS = ("path", "driver", "engine", "fallback_reason",
-                   "gram_max_d", "gram_mode", "config_hash", "backend")
+                   "gram_max_d", "gram_mode", "config_hash", "backend",
+                   "retries", "degraded_blocks")
 
 
 @dataclasses.dataclass

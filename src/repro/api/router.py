@@ -100,6 +100,23 @@ def route(exp: Experiment) -> RoutePlan:
                 "and the per-block engine")
         return RoutePlan(path="cohort", driver=inner, engine=engine.name)
 
+    # the resilience knobs (fault injection, retry/degradation, block
+    # checkpointing) are implemented by the cohort block loop only --
+    # silently ignoring them on silo/shuffle paths would be the same
+    # correctness trap as the owned-field clash above
+    resilience = [("Systems.faults", exp.systems.faults is not None),
+                  ("Exec.max_retries", exp.exec.max_retries != 0),
+                  ("Exec.degrade", exp.exec.degrade),
+                  ("Exec.checkpoint_every", exp.exec.checkpoint_every != 0),
+                  ("Exec.checkpoint_dir", exp.exec.checkpoint_dir is not None),
+                  ("Exec.resume", exp.exec.resume)]
+    bad = [name for name, is_set in resilience if is_set]
+    if bad:
+        raise ValueError(
+            f"{', '.join(bad)} only apply to population experiments: "
+            "fault injection, retry/degradation, and checkpoint/resume "
+            "live in the cohort block loop (repro.cohort.resilience)")
+
     grid = kind == "shuffles" or len(exp.method.regularizers) > 1
     if grid:
         if exp.systems.trace is not None:

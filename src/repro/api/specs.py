@@ -33,6 +33,7 @@ from typing import Any, Callable, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.cohort.resilience import FaultConfig
 from repro.core.dual import DualState, FederatedData
 from repro.core.mocha import DRIVERS, MochaConfig
 from repro.core.regularizers import MeanRegularized, Regularizer
@@ -163,6 +164,11 @@ class Systems:
     across runs (single-problem runs only).  ``sampler`` / ``dropout``
     describe cross-device participation: cohort selection law and the
     selected-but-failed probability (population problems only).
+    ``faults`` injects the deterministic chaos schedule
+    (``repro.cohort.resilience.FaultPlan``) into the cohort block loop --
+    one more simulated systems effect, pre-sampled like everything else
+    (population problems only; pair with ``Exec.max_retries`` /
+    ``Exec.degrade``).
     """
 
     network: str = "lte"
@@ -170,6 +176,7 @@ class Systems:
     trace: Optional[SystemsTrace] = None
     sampler: str = "uniform"           # uniform | weighted (availability)
     dropout: float = 0.0               # per-(selected client, round) failure
+    faults: Optional[FaultConfig] = None  # deterministic fault injection
 
     @property
     def policy(self) -> str:
@@ -207,6 +214,19 @@ class Exec:
     #: max solved-but-unmerged blocks when a block launches (0 = every
     #: prior block folds in first -- bit-identical to sequential)
     staleness: int = 0
+    #: per-block retry budget: a failed pack/solve attempt retries up to
+    #: this many times, each charging capped backoff to the simulated clock
+    max_retries: int = 0
+    #: exhausted block -> graceful degradation to the theory's dropped-node
+    #: fold (participated=False everywhere) instead of raising BlockFailure
+    degrade: bool = False
+    #: blocks between atomic state snapshots (0 = no cadence; failures
+    #: still force-save when ``checkpoint_dir`` is set)
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None  # where step_<block>.ckpt land
+    #: restore the latest snapshot under ``checkpoint_dir`` and continue
+    #: (bit-identical to the uninterrupted run; config-hash validated)
+    resume: bool = False
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
@@ -215,6 +235,16 @@ class Exec:
             raise ValueError(f"need overlap >= 1, got {self.overlap}")
         if self.staleness < 0:
             raise ValueError(f"need staleness >= 0, got {self.staleness}")
+        if self.max_retries < 0:
+            raise ValueError(
+                f"need max_retries >= 0, got {self.max_retries}")
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"need checkpoint_every >= 0, got {self.checkpoint_every}")
+        if ((self.checkpoint_every > 0 or self.resume)
+                and self.checkpoint_dir is None):
+            raise ValueError(
+                "checkpoint_every/resume need Exec.checkpoint_dir")
 
     def resolve_engine(self):
         """Instantiate the engine (mesh/comm_dtype configure 'sharded')."""
@@ -339,6 +369,12 @@ def as_cohort_config(exp: Experiment, seed: int = 0):
         n_pad=exp.exec.n_pad,
         overlap=exp.exec.overlap,
         staleness=exp.exec.staleness,
+        max_retries=exp.exec.max_retries,
+        degrade=exp.exec.degrade,
+        faults=exp.systems.faults,
+        checkpoint_every=exp.exec.checkpoint_every,
+        checkpoint_dir=exp.exec.checkpoint_dir,
+        resume=exp.exec.resume,
         inner=inner,
     )
 

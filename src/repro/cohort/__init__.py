@@ -8,6 +8,9 @@ from repro.cohort.driver import (COHORT_HISTORY_KEYS, CohortConfig,
                                  CohortRunResult, run_mocha_cohort)
 from repro.cohort.omega import ClusterOmega, StalenessBoundedMerger
 from repro.cohort.packing import CohortPacker, pack_cohort
+from repro.cohort.resilience import (BlockFailure, CohortCheckpointer,
+                                     FaultConfig, FaultPlan, FaultStats,
+                                     InjectedFault)
 from repro.cohort.population import (CROSS_DEVICE_1K, CROSS_DEVICE_1M,
                                      CROSS_DEVICE_10K, CROSS_DEVICE_100K,
                                      POPULATIONS, ClientBlock, Population,

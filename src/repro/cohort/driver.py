@@ -44,6 +44,16 @@ With K = m, a uniform sampler, no dropout, and omega refreshes off, every
 block is exactly one full-participation MOCHA round over the (permuted)
 population with the equivalent fixed Omega -- the cohort driver degrades to
 plain ``run_mocha`` (the parity test in tests/test_cohort.py).
+
+Both loops are FAULT-TOLERANT through ``repro.cohort.resilience``: the
+pack and solve stages run behind retry-with-backoff wrappers
+(``pack_block`` / ``solve_block``) that inject the pre-sampled
+``FaultPlan`` faults at the real seams, degrade exhausted blocks to
+dropped-node folds, and periodically checkpoint the whole mutable state
+for bit-identical resume.  All of it is inert by default: with no faults,
+no retries, and no checkpointing configured, the wrappers reduce to the
+bare pack/solve calls and results are bit-identical to the
+pre-resilience driver.
 """
 from __future__ import annotations
 
@@ -58,6 +68,10 @@ import numpy as np
 from repro.cohort.omega import ClusterOmega, StalenessBoundedMerger
 from repro.cohort.packing import CohortPacker
 from repro.cohort.population import Population
+from repro.cohort.resilience import (BlockFailure, CohortCheckpointer,
+                                     FaultConfig, FaultPlan, FaultStats,
+                                     InjectedFault, backoff_delay,
+                                     run_fingerprint)
 from repro.cohort.sampler import CohortSampler, CohortSchedule
 from repro.core import dual as dual_mod
 from repro.core.dual import DualState
@@ -104,6 +118,14 @@ class CohortConfig:
     n_pad: Optional[int] = None        # None = PopulationSpec.pad_width
     overlap: int = 1                   # pack-prefetch depth (1 = sequential)
     staleness: int = 0                 # max solved-but-unmerged at launch
+    # -- resilience (repro.cohort.resilience); all inert by default, so the
+    # -- zero-fault path is bit-identical to the pre-resilience driver
+    max_retries: int = 0               # per-block retry budget (pack + solve)
+    degrade: bool = False              # exhausted block -> dropped-node fold
+    faults: Optional[FaultConfig] = None  # deterministic fault injection
+    checkpoint_every: int = 0          # blocks between snapshots (0 = off)
+    checkpoint_dir: Optional[str] = None  # where step_<block>.ckpt land
+    resume: bool = False               # restore latest snapshot, continue
     #: the per-block solver view; engine shards the COHORT, never the
     #: population
     inner: MochaConfig = dataclasses.field(default_factory=MochaConfig)
@@ -130,6 +152,12 @@ class CohortRunResult:
     #: populated by ``_run_cohort``; Optional only so the dataclass field
     #: has a well-typed empty default.
     participation: Optional[np.ndarray] = None
+    #: fault accounting (retries charged, blocks degraded); stamped into
+    #: Report provenance and every BENCH row.  Always populated by
+    #: ``_run_cohort``.
+    fault_stats: Optional[FaultStats] = None
+    #: the checkpointed block this run resumed after (None = fresh run)
+    resumed_from: Optional[int] = None
 
     @property
     def omega_k(self) -> np.ndarray:
@@ -177,13 +205,16 @@ def run_mocha_cohort(pop: Population, reg: Regularizer,
                       per_task_sigma=cfg.inner.per_task_sigma,
                       budget=cfg.inner.budget),
         systems=Systems(network=cfg.network, config=cfg.systems,
-                        sampler=cfg.sampler, dropout=cfg.dropout),
+                        sampler=cfg.sampler, dropout=cfg.dropout,
+                        faults=cfg.faults),
         exec=Exec(engine=cfg.inner.engine, driver=cfg.inner.driver,
                   gram_max_d=cfg.inner.gram_max_d, cohort=cfg.cohort,
                   inner_rounds=cfg.inner_rounds, clusters=cfg.clusters,
                   eta=cfg.eta, cache_clients=cfg.cache_clients,
                   n_pad=cfg.n_pad, overlap=cfg.overlap,
-                  staleness=cfg.staleness),
+                  staleness=cfg.staleness, max_retries=cfg.max_retries,
+                  degrade=cfg.degrade, checkpoint_every=cfg.checkpoint_every,
+                  checkpoint_dir=cfg.checkpoint_dir, resume=cfg.resume),
         eval=Eval(record_every=cfg.record_every))
     return exp.run(cfg.seed).result
 
@@ -209,6 +240,31 @@ class _SolvedBlock:
     primal: float
     gap: float
     elapsed_s: float
+    # -- resilience bookkeeping, filled by the solve-stage wrapper ----------
+    degraded: bool = False   # exhausted retries, folded as dropped-node
+    retries: int = 0         # failed solve attempts that were retried
+    pack_retries: int = 0    # failed pack attempts (carried from pack stage)
+    #: ``SystemsTrace.clock_state`` captured after this block's rounds
+    #: committed; only populated when checkpointing is active (the fold
+    #: stage keeps the latest one as the frontier clock for snapshots)
+    clock: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class _PackedBlock:
+    """Pack-stage hand-off: the packed federation plus fault bookkeeping.
+
+    ``penalty_s`` is retry backoff accrued in the PACK stage; the pack
+    worker must not touch the solve-owned ``SystemsTrace``, so the charge
+    travels with the payload and the solve stage applies it first.
+    ``data is None`` marks a pack-exhausted block under degradation (the
+    solve stage folds it as dropped-node without packing anything).
+    """
+
+    data: Optional[object]   # FederatedData, or None = degraded at pack
+    sizes: np.ndarray        # (K,) int64 true client sizes
+    penalty_s: float = 0.0   # backoff to charge to the simulated clock
+    retries: int = 0         # failed pack attempts
 
 
 class _BlockLoop:
@@ -233,6 +289,7 @@ class _BlockLoop:
         m, spec = pop.m, pop.spec
         self.cfg, self.reg = cfg, reg
         self.n_pad = int(cfg.n_pad or spec.pad_width)
+        self.d = spec.d
         self.state = ClusterOmega(m, cfg.clusters, spec.d, reg, eta=cfg.eta,
                                   cache_clients=cfg.cache_clients)  # owner: main
         self.merger = StalenessBoundedMerger(
@@ -264,16 +321,68 @@ class _BlockLoop:
         self.n_seen = 0  # owner: main
         self.participation = np.zeros(m, np.int64)  # owner: main
 
+        # -- resilience: fault plan, retry budget, checkpoint/resume --------
+        if cfg.max_retries < 0:
+            raise ValueError(f"need max_retries >= 0, got {cfg.max_retries}")
+        self.max_attempts = cfg.max_retries + 1
+        self.plan: Optional[FaultPlan] = None
+        if cfg.faults is not None:
+            self.plan = FaultPlan.presample(cfg.faults, cfg.seed, cfg.rounds,
+                                            cfg.max_retries)
+            if cfg.degrade:
+                # the plan is total, so the Assumption-2 guard fires BEFORE
+                # any block runs (clear diagnostic instead of a useless run)
+                self.plan.validate_assumption2(cfg.dropout)
+        self.stats = FaultStats()  # owner: main
+        #: (dual, primal, gap) of the last non-degraded fold: a degraded
+        #: block records carried-forward metrics (its own are undefined --
+        #: nothing was solved), keeping the history NaN-free and resumable
+        self._last_metrics = (0.0, 0.0, 0.0)  # owner: main
+        self._last_clock: Optional[dict] = None  # owner: main
+        #: launch-time (alpha0, omega0) of launched-but-unfolded blocks;
+        #: checkpointed so staleness >= 1 resumes replay the EXACT staler
+        #: state those launches read (dict empty unless checkpointing)
+        self._launch_snaps: Dict[int, tuple] = {}  # owner: main
+        self._resume_snaps: Dict[int, tuple] = {}  # owner: main
+        self.start_block = 0
+        self.resumed_from: Optional[int] = None
+        self._ckpt: Optional[CohortCheckpointer] = None
+        if (cfg.checkpoint_every > 0 or cfg.resume
+                or cfg.checkpoint_dir is not None):
+            if cfg.checkpoint_dir is None:
+                raise ValueError(
+                    "checkpoint_every/resume need CohortConfig."
+                    "checkpoint_dir")
+            self._ckpt = CohortCheckpointer(
+                cfg.checkpoint_dir, cfg.checkpoint_every,
+                run_fingerprint(pop, reg, cfg))
+        if cfg.resume:
+            # workers are not running yet: restore writes every owned field
+            # from the latest snapshot, then the loops start at the frontier
+            self.start_block = self._ckpt.restore_into(self)
+            self.resumed_from = self.start_block - 1
+
     def launch_args(self, b: int):  # worker: main
         """MAIN THREAD: block b's cohort + its launch-time state snapshot.
 
         The warm-start alpha rows and the expanded cohort Omega are read
         from the mutable ``ClusterOmega`` here, at launch -- this read
-        point is exactly what the staleness bound governs.
+        point is exactly what the staleness bound governs.  On a resumed
+        run, a block that had already launched before the interruption
+        reads its CHECKPOINTED launch snapshot instead: at staleness >= 1
+        that launch observed state staler than the restored frontier, so
+        recomputing it here would break resume bit-identity.
         """
         ids, dropped = self.schedule.ids[b], self.schedule.dropped[b]
-        return (ids, dropped, self.state.cohort_alpha(ids, self.n_pad),
-                self.state.cohort_omega(ids))
+        snap = self._resume_snaps.pop(b, None)
+        if snap is not None:
+            alpha0, omega0 = snap
+        else:
+            alpha0 = self.state.cohort_alpha(ids, self.n_pad)
+            omega0 = np.asarray(self.state.cohort_omega(ids), np.float32)
+        if self._ckpt is not None:
+            self._launch_snaps[b] = (alpha0, omega0)
+        return ids, dropped, alpha0, jnp.asarray(omega0)
 
     def solve(self, b: int, data, ids, dropped, alpha0_np,
               omega0) -> _SolvedBlock:  # worker: solve
@@ -305,9 +414,121 @@ class _BlockLoop:
             dual=res.final("dual"), primal=res.final("primal"),
             gap=res.final("gap"), elapsed_s=self.trace.elapsed_s)
 
+    def pack_block(self, b: int) -> _PackedBlock:  # worker: pack
+        """PACK STAGE wrapper: fault injection + retry for block b.
+
+        ``CohortPacker.pack`` is retry-idempotent (its staging buffers are
+        fully overwritten per call), so a failed attempt -- injected or
+        real -- is simply re-run.  Backoff cannot be charged here (the
+        simulated clock is solve-owned), so it accrues as ``penalty_s`` in
+        the payload.  An exhausted block either raises ``BlockFailure`` or,
+        under degradation, hands the solve stage a ``data=None`` marker.
+        """
+        ids = self.schedule.ids[b]
+        penalty, fails, err = 0.0, 0, None
+        for a in range(self.max_attempts):
+            if self.plan is not None and self.plan.pack_fails(b, a):
+                err = InjectedFault("pack", b, a)
+            else:
+                try:
+                    data, sizes = self.packer.pack(ids)
+                    return _PackedBlock(data, sizes, penalty, fails)
+                except Exception as e:  # noqa: BLE001 -- retried, then
+                    err = e             # raised/degraded below (never dropped)
+            fails += 1
+            penalty += (self.plan.backoff(a) if self.plan is not None
+                        else backoff_delay(a))
+        if not self.cfg.degrade:
+            raise BlockFailure(b, "pack", err)
+        return _PackedBlock(None, np.zeros(self.cfg.cohort, np.int64),
+                            penalty, fails)
+
+    def solve_block(self, b: int, packed: _PackedBlock, ids, dropped,
+                    alpha0_np, omega0) -> _SolvedBlock:  # worker: solve
+        """SOLVE STAGE wrapper: retry with capped backoff, then degrade.
+
+        Runs on the single solve worker like ``solve`` itself, so every
+        clock charge (pack penalty first, then per-attempt backoff, then
+        any injected fold delay) lands in block order.  Injected faults
+        fire BEFORE the solve call -- the trace is untouched, so a retry
+        redraws nothing.  A REAL solve exception that leaves the trace
+        mid-round cannot be retried deterministically (the round-indexed
+        draw streams would desync) and fails hard instead.
+        """
+        if packed.penalty_s > 0.0:
+            self.trace.charge(packed.penalty_s)
+        s: Optional[_SolvedBlock] = None
+        fails, err = 0, None
+        if packed.data is not None:
+            for a in range(self.max_attempts):
+                if self.plan is not None and self.plan.solve_fails(b, a):
+                    err = InjectedFault("solve", b, a)
+                else:
+                    try:
+                        s = self.solve(b, packed.data, ids, dropped,
+                                       alpha0_np, omega0)
+                        break
+                    except Exception as e:  # noqa: BLE001 -- retried, then
+                        err = e             # raised/degraded (never dropped)
+                        if self.trace.mid_round:
+                            raise BlockFailure(b, "solve", e) from e
+                fails += 1
+                self.trace.charge(self.plan.backoff(a)
+                                  if self.plan is not None
+                                  else backoff_delay(a))
+        if s is None:
+            if not self.cfg.degrade:
+                raise BlockFailure(b, "solve", err)
+            s = self._degraded_block(b, ids)
+        s.retries = fails
+        s.pack_retries = packed.retries
+        if self.plan is not None:
+            delay = self.plan.fold_delay(b)
+            if delay > 0.0:
+                self.trace.charge(delay)
+                s.elapsed_s = self.trace.elapsed_s
+        if self._ckpt is not None:
+            s.clock = self.trace.clock_state()
+        return s
+
+    def _degraded_block(self, b: int, ids) -> _SolvedBlock:  # worker: solve
+        """Dropped-node semantics for an exhausted block (Assumption 2).
+
+        The entire cohort is treated as failed: ``participated`` all False,
+        so the fold applies NO state update (h_t -> 0 exactly as a
+        schedule-dropped client).  Crucially the trace still commits
+        ``inner_rounds`` zero-step rounds at this block's rate scale --
+        the SAME draw-set a solved block consumes -- so the RNG stream
+        position after block b is independent of the fault plan and every
+        later block redraws identically.
+        """
+        cfg = self.cfg
+        self.trace.set_rate_scale(self.rate_mult[ids])
+        zeros = np.zeros(cfg.cohort, np.int64)
+        for _ in range(cfg.inner_rounds):
+            self.trace.begin_round()
+            self.trace.commit(zeros)
+        return _SolvedBlock(
+            W=np.zeros((cfg.cohort, self.d), np.float32),
+            alpha=np.zeros((cfg.cohort, self.n_pad), np.float32),
+            participated=np.zeros(cfg.cohort, bool), max_steps=0,
+            dual=0.0, primal=0.0, gap=0.0,
+            elapsed_s=self.trace.elapsed_s, degraded=True)
+
     def fold(self, b: int, ids: np.ndarray, sizes: np.ndarray,
              s: _SolvedBlock) -> None:  # worker: main
         """MAIN THREAD: fold block b (schedule order, via the merger)."""
+        if s.degraded:
+            # a degraded block solved nothing: record the last real metrics
+            # (carried forward, like a flat-lined monitor) -- the state
+            # update below is a no-op because participated is all False
+            self.stats.degraded_blocks += 1
+            s = dataclasses.replace(
+                s, dual=self._last_metrics[0], primal=self._last_metrics[1],
+                gap=self._last_metrics[2])
+        else:
+            self._last_metrics = (s.dual, s.primal, s.gap)
+        self.stats.retries += s.retries + s.pack_retries
         self.participation[ids[s.participated]] += 1
         self.merger.fold(b, ids, s.W, s.alpha, sizes, s.participated)
         new = ids[s.participated & ~self.seen[ids]]
@@ -322,6 +543,22 @@ class _BlockLoop:
             h["time"].append(s.elapsed_s)
             h["round_max_steps"].append(s.max_steps)
             h["unique_clients"].append(self.n_seen)
+        if self._ckpt is not None:
+            self._last_clock = s.clock
+            self._launch_snaps.pop(b, None)
+            if self._ckpt.due(b):
+                self._ckpt.save(self, b)
+
+    def checkpoint_on_failure(self) -> None:  # worker: main
+        """Force-save the merge frontier before a failure propagates.
+
+        Called from the loops' exception paths: everything folded so far is
+        durable, so a crash loses at most the in-flight work (recomputed
+        deterministically on resume).  No-op without a checkpointer or
+        before the first fold.
+        """
+        if self._ckpt is not None and self.merger.merged_through >= 0:
+            self._ckpt.save(self, self.merger.merged_through)
 
     def result(self) -> CohortRunResult:  # worker: main
         return CohortRunResult(
@@ -329,16 +566,27 @@ class _BlockLoop:
             # solve-owned, but both pools have joined before result()
             trace=self.trace,  # reprolint: ok T301
             schedule=self.schedule, rate_mult=self.rate_mult,
-            participation=self.participation)
+            participation=self.participation, fault_stats=self.stats,
+            resumed_from=self.resumed_from)
 
 
 def _run_blocks_sequential(loop: _BlockLoop, rounds: int) -> None:
-    """The reference block loop: pack, solve, fold, one block at a time."""
-    for b in range(rounds):
-        ids, dropped, alpha0, omega0 = loop.launch_args(b)
-        data, sizes = loop.packer.pack(ids)
-        loop.fold(b, ids, sizes, loop.solve(b, data, ids, dropped, alpha0,
-                                            omega0))
+    """The reference block loop: pack, solve, fold, one block at a time.
+
+    On failure (a ``BlockFailure`` escaping the retry/degradation ladder,
+    or anything unexpected) the merge frontier is force-checkpointed before
+    the exception propagates, so at most the failing block is recomputed.
+    """
+    try:
+        for b in range(loop.start_block, rounds):
+            ids, dropped, alpha0, omega0 = loop.launch_args(b)
+            packed = loop.pack_block(b)
+            loop.fold(b, ids, packed.sizes,
+                      loop.solve_block(b, packed, ids, dropped, alpha0,
+                                       omega0))
+    except BaseException:
+        loop.checkpoint_on_failure()
+        raise
 
 
 def _run_blocks_pipelined(loop: _BlockLoop, rounds: int, overlap: int,
@@ -351,32 +599,53 @@ def _run_blocks_pipelined(loop: _BlockLoop, rounds: int, overlap: int,
     block counts, so the schedule of state reads -- and hence the result --
     is deterministic for every (overlap, staleness), and identical to the
     sequential loop at staleness 0.
+
+    Failure hardening: completed predecessors of a failing block have
+    already folded (the drain folds strictly in schedule order, so the
+    failure surfaces only after every earlier result was consumed); the
+    exception path then cancels all queued pack work
+    (``shutdown(cancel_futures=True)``), force-checkpoints the merge
+    frontier, and re-raises promptly -- it never blocks on in-flight solve
+    futures, and a crash loses at most the un-folded in-flight blocks
+    (recomputed deterministically on resume).  NOTHING extra is folded
+    here: folding ahead of the drain schedule would shift the launch-time
+    state later blocks observe and break resume bit-identity.
     """
     depth = max(1, overlap)
-    with ThreadPoolExecutor(1, "cohort-pack") as packs, \
-            ThreadPoolExecutor(1, "cohort-solve") as solves:
-        pack_q = deque(
-            packs.submit(loop.packer.pack, loop.schedule.ids[b])
-            for b in range(min(depth, rounds)))
-        in_flight: deque = deque()   # (block, ids, sizes, future)
-        for b in range(rounds):
+    start = loop.start_block
+    packs = ThreadPoolExecutor(1, "cohort-pack")
+    solves = ThreadPoolExecutor(1, "cohort-solve")
+    pack_q = deque(
+        packs.submit(loop.pack_block, b)
+        for b in range(start, min(start + depth, rounds)))
+    in_flight: deque = deque()   # (block, ids, sizes, future)
+    try:
+        for b in range(start, rounds):
             while len(in_flight) > staleness:
                 fb, fids, fsizes, fut = in_flight.popleft()
                 loop.fold(fb, fids, fsizes, fut.result())
-            data, sizes = pack_q.popleft().result()
+            packed = pack_q.popleft().result()
             if b + depth < rounds:
-                pack_q.append(packs.submit(loop.packer.pack,
-                                           loop.schedule.ids[b + depth]))
+                pack_q.append(packs.submit(loop.pack_block, b + depth))
             ids, dropped, alpha0, omega0 = loop.launch_args(b)
             if not loop.merger.admissible(b):
                 raise RuntimeError(   # drain rule broken -- never expected
                     f"block {b} launching with merge frontier "
                     f"{loop.merger.merged_through} (staleness {staleness})")
-            in_flight.append((b, ids, sizes, solves.submit(
-                loop.solve, b, data, ids, dropped, alpha0, omega0)))
+            in_flight.append((b, ids, packed.sizes, solves.submit(
+                loop.solve_block, b, packed, ids, dropped, alpha0, omega0)))
         while in_flight:
             fb, fids, fsizes, fut = in_flight.popleft()
             loop.fold(fb, fids, fsizes, fut.result())
+    except BaseException:
+        for f in pack_q:
+            f.cancel()
+        packs.shutdown(wait=False, cancel_futures=True)
+        solves.shutdown(wait=False, cancel_futures=True)
+        loop.checkpoint_on_failure()
+        raise
+    packs.shutdown()
+    solves.shutdown()
 
 
 def _run_cohort(pop: Population, reg: Regularizer,

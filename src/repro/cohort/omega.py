@@ -155,6 +155,50 @@ class ClusterOmega:
             reg.update_omega(jnp.asarray(self.centroids),
                              jnp.asarray(self.omega_k)), np.float64)
 
+    # -- resilience snapshots (repro.cohort.resilience) ---------------------
+
+    def snapshot(self, n_pad: int) -> "dict[str, np.ndarray]":  # worker: main
+        """Fixed-shape host encoding of the full factored state.
+
+        Every array's shape is a pure function of (m, k, d, cache_clients,
+        n_pad), so the strict ``train.checkpoint.restore`` shape check
+        applies.  The LRU cache is flattened in recency order (least-recent
+        first) into fixed-capacity arrays: ``cache_ids`` slot -1 = empty,
+        ``cache_n`` the true alpha row length under ``n_pad`` padding.
+        """
+        C = self.cache_clients
+        ids = np.full(C, -1, np.int64)
+        n = np.zeros(C, np.int64)
+        alpha = np.zeros((C, int(n_pad)), np.float32)
+        delta = np.zeros((C, self.d), np.float32)
+        for slot, (t, (a, w)) in enumerate(self._cache.items()):
+            ids[slot] = t
+            n[slot] = a.shape[0]
+            alpha[slot, :a.shape[0]] = a
+            delta[slot] = w
+        return {"omega_k": self.omega_k.copy(),
+                "centroids": self.centroids.copy(),
+                "counts": self.counts.copy(), "assign": self.assign.copy(),
+                "cache_ids": ids, "cache_n": n, "cache_alpha": alpha,
+                "cache_delta": delta}
+
+    def restore_state(self, snap: "dict[str, np.ndarray]") -> None:  # worker: main
+        """Install a ``snapshot`` (inverse; rebuilds the LRU order)."""
+        self.omega_k = np.asarray(snap["omega_k"], np.float64).copy()
+        self.centroids = np.asarray(snap["centroids"], np.float32).copy()
+        self.counts = np.asarray(snap["counts"], np.int64).copy()
+        self.assign = np.asarray(snap["assign"], np.int32).copy()
+        self._cache.clear()
+        ids, n = snap["cache_ids"], snap["cache_n"]
+        for slot in range(len(ids)):
+            if ids[slot] < 0:
+                continue
+            n_t = int(n[slot])
+            self._cache[int(ids[slot])] = (
+                np.asarray(snap["cache_alpha"][slot, :n_t],
+                           np.float32).copy(),
+                np.asarray(snap["cache_delta"][slot], np.float32).copy())
+
     # -- introspection ------------------------------------------------------
 
     @property

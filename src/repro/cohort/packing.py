@@ -50,6 +50,12 @@ class CohortPacker:
     pipeline stage; the overlapped driver packs on a single worker) -- the
     staging buffers are ``# owner: pack`` and ``tools/reprolint`` (T301/
     T302) rejects any access from outside pack-tagged functions.
+
+    ``pack`` IS retry-idempotent: every staging buffer is fully overwritten
+    on each call and no cross-call state accumulates, so the resilience
+    layer (repro.cohort.resilience) may re-invoke it for the same block
+    after an injected or real pack failure and get a bit-identical
+    federation.
     """
 
     def __init__(self, pop: Population, cohort: int,

@@ -103,6 +103,23 @@ class CohortSchedule:
     def cohort(self) -> int:
         return self.ids.shape[1]
 
+    def with_all_dropped(self, block: int) -> "CohortSchedule":
+        """Copy with every slot of ``block`` marked schedule-dropped.
+
+        Fault-harness / test helper: an all-dropped block exercises the
+        theory's H_t -> 0 boundary (every selected client fails), which the
+        driver must fold as ZERO participation -- no centroid motion, no
+        ``seen``/``participation`` increment (tests/test_cohort.py pins
+        this on both block loops).  Selection ``ids`` are shared, the drop
+        mask is copied.
+        """
+        if not 0 <= block < self.rounds:
+            raise ValueError(
+                f"block {block} outside schedule of {self.rounds} rounds")
+        dropped = self.dropped.copy()
+        dropped[block, :] = True
+        return CohortSchedule(ids=self.ids, dropped=dropped)
+
     def participation_counts(self, m: int) -> np.ndarray:
         """(m,) how often each client was selected and not schedule-dropped.
 

@@ -355,6 +355,76 @@ class SystemsTrace:
             self.begin_round()
             self.commit(row)
 
+    # -- resilience hooks (repro.cohort.resilience) -------------------------
+
+    @property
+    def mid_round(self) -> bool:
+        """True between ``begin_round`` and ``commit``.
+
+        The resilience layer refuses to retry a solve whose failure left
+        the trace mid-round: the round-indexed draw streams would desync
+        and determinism is lost -- such a block fails hard instead.
+        """
+        return self._round_rates is not None
+
+    def charge(self, seconds: float) -> float:
+        """Advance the simulated clock by out-of-round overhead seconds.
+
+        The resilience layer charges retry backoff and injected fold delays
+        here, so fault handling costs simulated time exactly like any other
+        systems effect.  No round event is logged and no RNG draw is
+        consumed -- the round-indexed draw streams (and hence every
+        pre-sampled schedule) are untouched by fault handling.
+        """
+        if self._round_rates is not None:
+            raise RuntimeError("charge called mid-round")
+        s = float(seconds)
+        if s < 0.0:
+            raise ValueError(f"charge needs seconds >= 0, got {s}")
+        self.elapsed_s += s
+        return s
+
+    def clock_state(self) -> Dict[str, np.ndarray]:
+        """Fixed-shape host snapshot of the simulated clock.
+
+        Captured between rounds (raises mid-round) for cohort checkpoints:
+        the PCG64 stream position packed as (6,) uint64 words, the global
+        clock, and per-node busy time.  ``restore_clock`` of this snapshot
+        makes every subsequent round redraw identically, which is what makes
+        resumed runs bit-identical.  The per-round event log is NOT part of
+        the snapshot -- a resumed trace's ``events`` restarts empty (the
+        cumulative clock lives in ``elapsed_s`` / the run history).
+        """
+        if self._round_rates is not None:
+            raise RuntimeError("clock_state called mid-round")
+        st = self._rng.bit_generator.state
+        if st.get("bit_generator") != "PCG64":
+            raise NotImplementedError(
+                f"clock_state supports PCG64 only, got "
+                f"{st.get('bit_generator')!r}")
+        lo = (1 << 64) - 1
+        s, inc = st["state"]["state"], st["state"]["inc"]
+        rng = np.array([s & lo, (s >> 64) & lo, inc & lo, (inc >> 64) & lo,
+                        int(st["has_uint32"]), int(st["uinteger"])],
+                       np.uint64)
+        return {"rng": rng, "elapsed_s": np.float64(self.elapsed_s),
+                "node_busy_s": self.node_busy_s.copy()}
+
+    def restore_clock(self, snap: Dict[str, np.ndarray]) -> None:
+        """Install a ``clock_state`` snapshot (same ``SystemsConfig``)."""
+        if self._round_rates is not None:
+            raise RuntimeError("restore_clock called mid-round")
+        rng = np.asarray(snap["rng"], np.uint64)
+        st = self._rng.bit_generator.state
+        st["state"]["state"] = int(rng[0]) | (int(rng[1]) << 64)
+        st["state"]["inc"] = int(rng[2]) | (int(rng[3]) << 64)
+        st["has_uint32"] = int(rng[4])
+        st["uinteger"] = int(rng[5])
+        self._rng.bit_generator.state = st
+        self.elapsed_s = float(snap["elapsed_s"])
+        self.node_busy_s = np.asarray(snap["node_busy_s"],
+                                      np.float64).copy()
+
     # -- analysis -----------------------------------------------------------
 
     def utilization(self) -> np.ndarray:

@@ -30,7 +30,9 @@ def _decode(obj):
         get = lambda k: obj.get(k.encode() if isinstance(next(iter(obj)), bytes) else k)  # noqa: E731
         dtype = np.dtype(get("dtype"))
         shape = tuple(get("shape"))
-        return np.frombuffer(get("data"), dtype=dtype).reshape(shape)
+        # frombuffer views the (immutable) msgpack bytes, so the array would
+        # be read-only; copy so restored leaves are ordinary writable arrays
+        return np.frombuffer(get("data"), dtype=dtype).reshape(shape).copy()
     return obj
 
 
@@ -60,8 +62,14 @@ def latest_step(path: str) -> int | None:
 
 
 def restore(path: str, like: Any, step: int | None = None,
-            ) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (strict shape/dtype check)."""
+            as_numpy: bool = False) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (strict shape/dtype check).
+
+    ``as_numpy=True`` returns writable host ``np.ndarray`` leaves instead of
+    device arrays -- for host-side state (e.g. the cohort resilience
+    checkpoints, repro.cohort.resilience) that is mutated in place after
+    restore.
+    """
     step = step if step is not None else latest_step(path)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {path}")
@@ -79,5 +87,6 @@ def restore(path: str, like: Any, step: int | None = None,
         want_arr = np.asarray(want)
         if arr.shape != want_arr.shape:
             raise ValueError(f"shape mismatch {arr.shape} vs {want_arr.shape}")
-        out.append(jnp.asarray(arr.astype(want_arr.dtype)))
+        cast = arr.astype(want_arr.dtype)
+        out.append(cast if as_numpy else jnp.asarray(cast))
     return jax.tree_util.tree_unflatten(treedef, out), payload["step"]

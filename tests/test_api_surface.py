@@ -23,10 +23,12 @@ EXPECTED_FIELDS = {
     "Problem": ("train", "population"),
     "Method": ("loss", "regularizers", "rounds", "omega_update_every",
                "gamma", "per_task_sigma", "budget", "budget_fn", "omega0"),
-    "Systems": ("network", "config", "trace", "sampler", "dropout"),
+    "Systems": ("network", "config", "trace", "sampler", "dropout", "faults"),
     "Exec": ("engine", "driver", "gram_max_d", "mesh", "comm_dtype",
              "state0", "cohort", "inner_rounds", "clusters", "eta",
-             "cache_clients", "n_pad", "overlap", "staleness"),
+             "cache_clients", "n_pad", "overlap", "staleness",
+             "max_retries", "degrade", "checkpoint_every", "checkpoint_dir",
+             "resume"),
     "Eval": ("record_every", "holdout", "holdout_clients", "metrics"),
     "Experiment": ("problem", "method", "systems", "exec", "eval"),
     "RoutePlan": ("path", "driver", "engine", "reason"),
@@ -42,7 +44,9 @@ EXPECTED_CONFIG_FIELDS = {
     CohortConfig: ("rounds", "cohort", "inner_rounds", "sampler", "dropout",
                    "clusters", "eta", "omega_update_every", "cache_clients",
                    "network", "systems", "seed", "record_every", "n_pad",
-                   "overlap", "staleness", "inner"),
+                   "overlap", "staleness", "max_retries", "degrade",
+                   "faults", "checkpoint_every", "checkpoint_dir", "resume",
+                   "inner"),
 }
 
 
@@ -70,5 +74,6 @@ def test_route_paths_and_provenance_keys_snapshot():
     assert api.PROBLEM_KINDS == ("silo", "shuffles", "population")
     assert api.PROVENANCE_KEYS == ("path", "driver", "engine",
                                    "fallback_reason", "gram_max_d",
-                                   "gram_mode", "config_hash", "backend")
+                                   "gram_mode", "config_hash", "backend",
+                                   "retries", "degraded_blocks")
     assert api.METRICS == ("error", "loss")

@@ -212,6 +212,56 @@ def test_cohort_dropout_fault_tolerance():
     assert res.history["primal"][-1] < res.history["primal"][0]
 
 
+def test_all_dropped_block_folds_zero_participation(monkeypatch):
+    """The theory's H_t -> 0 boundary block: ``CohortSchedule.
+    with_all_dropped`` composed with ``theta.drop_masked_budgets`` must
+    fold a whole-cohort failure as zero participation -- no centroid/Omega
+    motion, no ``seen``/``participation`` increment -- on BOTH block
+    loops."""
+    from repro.cohort.driver import _BlockLoop
+    pop = Population(SPEC, seed=0)
+    dead = 2
+    cfg = _small_cfg(dropout=0.0, record_every=1)
+
+    # sequential loop, stepped manually so state motion brackets the fold
+    loop = _BlockLoop(pop, REG, cfg)
+    loop.schedule = loop.schedule.with_all_dropped(dead)
+    for b in range(cfg.rounds):
+        ids, dropped, alpha0, omega0 = loop.launch_args(b)
+        packed = loop.pack_block(b)
+        s = loop.solve_block(b, packed, ids, dropped, alpha0, omega0)
+        if b == dead:
+            # drop_masked_budgets zeroed every slot's budget -> no steps
+            assert not s.participated.any()
+            cen = loop.state.centroids.copy()
+            omk = loop.state.omega_k.copy()
+            seen = loop.seen.copy()
+        loop.fold(b, ids, packed.sizes, s)
+        if b == dead:
+            np.testing.assert_array_equal(loop.state.centroids, cen)
+            np.testing.assert_array_equal(loop.state.omega_k, omk)
+            np.testing.assert_array_equal(loop.seen, seen)
+    seq = loop.result()
+    # executed participation equals the schedule with the dead block out
+    np.testing.assert_array_equal(
+        seq.participation, seq.schedule.participation_counts(SPEC.m))
+    assert seq.history["unique_clients"][dead] == \
+        seq.history["unique_clients"][dead - 1]
+
+    # pipelined loop under the same schedule: bit-identical fold semantics
+    from repro.cohort.sampler import CohortSampler
+    orig = CohortSampler.presample
+    monkeypatch.setattr(
+        CohortSampler, "presample",
+        lambda self, seed, rounds: orig(self, seed,
+                                        rounds).with_all_dropped(dead))
+    pipe = run_mocha_cohort(pop, REG, dataclasses.replace(cfg, overlap=3))
+    assert pipe.schedule.dropped[dead].all()
+    assert seq.history == pipe.history
+    np.testing.assert_array_equal(seq.centroids, pipe.centroids)
+    np.testing.assert_array_equal(seq.participation, pipe.participation)
+
+
 def test_cohort_learns_cluster_structure():
     """With separated latent clusters and k = truth, the learned
     assignments recover the ground truth for participated clients."""

@@ -119,6 +119,50 @@ def test_d104_bench_time_negative(tmp_path):
     assert "D104" not in _rules(out)
 
 
+def test_d105_silent_fault_swallow_positive(tmp_path):
+    out = _lint(tmp_path, "src/repro/cohort/foo.py", """\
+        def f(block):
+            try:
+                return block()
+            except Exception:
+                pass
+        def g(block):
+            try:
+                return block()
+            except:
+                return None
+        """)
+    assert _rules(out) == ["D105"]
+    assert len(out) == 2          # the blanket pass AND the bare except
+
+
+def test_d105_silent_fault_swallow_negative(tmp_path):
+    # handled blanket catches (retry ladders that re-raise/record) are the
+    # sanctioned shape; narrow excepts may pass; scope is src/repro only
+    assert _lint(tmp_path, "src/repro/cohort/foo.py", """\
+        def f(block, attempts):
+            err = None
+            for _ in range(attempts):
+                try:
+                    return block()
+                except Exception as e:  # noqa: BLE001
+                    err = e
+            raise err
+        def g(d, k):
+            try:
+                return d[k]
+            except KeyError:
+                pass
+        """) == []
+    assert _lint(tmp_path, "benchmarks/foo.py", """\
+        def f(block):
+            try:
+                return block()
+            except Exception:
+                pass
+        """) == []
+
+
 # -- P family ---------------------------------------------------------------
 
 def test_p201_raw_gram_positive(tmp_path):

@@ -116,6 +116,27 @@ def test_checkpoint_latest_and_strictness():
             ckpt.restore(d, {"w": np.zeros((3, 3), np.float32)})
 
 
+def test_checkpoint_restore_as_numpy_is_writable():
+    """Regression: restored leaves must be ordinary writable arrays.
+
+    ``_decode`` builds leaves with ``np.frombuffer`` over the msgpack
+    payload, which used to hand back READ-ONLY views of the immutable
+    bytes -- any consumer mutating restored state in place (the cohort
+    resilience checkpoints do) crashed with "assignment destination is
+    read-only"."""
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 0, tree)
+        host, _ = ckpt.restore(d, tree, as_numpy=True)
+        assert isinstance(host["w"], np.ndarray)
+        assert host["w"].flags.writeable
+        host["w"][0, 0] = 99.0               # must not raise
+        assert host["w"][0, 0] == 99.0
+        # device restore (the default) also starts from a mutable copy
+        dev, _ = ckpt.restore(d, tree)
+        np.testing.assert_array_equal(np.asarray(dev["w"]), tree["w"])
+
+
 def test_token_stream_deterministic_and_bounded():
     cfg = get_config("gemma-2b").reduced()
     a = list(TokenStream(cfg, DataConfig(seq_len=16, batch_size=2,

@@ -293,6 +293,45 @@ class D104BenchProvenanceTime(Rule):
                 yield ctx.finding(self, node, f"calendar-time read `{name}`")
 
 
+class D105SilentFaultSwallow(Rule):
+    id = "D105"
+    summary = ("silent fault swallowing; failures must be retried, "
+               "degraded, or raised -- never dropped")
+    hint = ("route failures through repro.cohort.resilience (retry/"
+            "degrade/BlockFailure) or narrow the except and handle it; a "
+            "bare `except:` / `except Exception: pass` hides real faults "
+            "from the resilience layer (DESIGN.md section 10)")
+    scope = ("src/repro/*",)
+
+    _BLANKET = {"Exception", "BaseException"}
+
+    @staticmethod
+    def _swallows(handler: ast.ExceptHandler) -> bool:
+        """Body does nothing: only ``pass`` / ``...`` statements."""
+        return all(
+            isinstance(st, ast.Pass)
+            or (isinstance(st, ast.Expr)
+                and isinstance(st.value, ast.Constant)
+                and st.value.value is Ellipsis)
+            for st in handler.body)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield ctx.finding(
+                    self, node, "bare `except:` (catches everything, "
+                    "including KeyboardInterrupt)")
+            elif (isinstance(node.type, ast.Name)
+                  and node.type.id in self._BLANKET
+                  and self._swallows(node)):
+                yield ctx.finding(
+                    self, node,
+                    f"`except {node.type.id}: pass` swallows faults "
+                    "silently")
+
+
 # ---------------------------------------------------------------------------
 # P family -- parity contracts
 
@@ -577,7 +616,8 @@ class T302UntaggedOwnedWrite(_OwnershipRule):
 
 ALL_RULES: Tuple[Rule, ...] = (
     D101WallClockRead(), D102StdlibRandom(), D103UnseededNumpyRng(),
-    D104BenchProvenanceTime(), P201RawSelfGram(), P202ManualRowReduction(),
+    D104BenchProvenanceTime(), D105SilentFaultSwallow(),
+    P201RawSelfGram(), P202ManualRowReduction(),
     P203ScanHostMaterialization(), P204LegacyEntryCall(),
     T301WrongWorkerAccess(), T302UntaggedOwnedWrite(),
 )
