@@ -15,9 +15,10 @@ from repro.core import (BudgetConfig, MeanRegularized, MiniBatchConfig,
                         run_mb_sdca, run_mb_sgd, stack_federations)
 from repro.core import systems_model
 from repro.data import synthetic as syn
-# the sanctioned (result, elapsed_us) wrapper, re-exported for the suite
-# modules -- benchmarks read the wall clock only through repro.utils.timing
-# (reprolint rule D101)
+# the sanctioned (result, elapsed) wrapper, re-exported for the suite
+# modules -- elapsed is in MICROSECONDS (suite modules store it into *_us
+# BENCH columns verbatim); benchmarks read the wall clock only through
+# repro.utils.timing (reprolint rule D101)
 from repro.utils.timing import timed  # noqa: F401
 
 # reduced protocol vs the paper (documented in EXPERIMENTS.md):

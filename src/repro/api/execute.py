@@ -12,10 +12,12 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import os
 from typing import Any, Dict, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.api.report import Report
 from repro.api.router import RoutePlan, route
 from repro.api.specs import (Experiment, as_cohort_config, as_mocha_config,
@@ -42,7 +44,8 @@ def base_provenance() -> Dict[str, Any]:
             "fallback_reason": None, "gram_max_d": int(active_gram_max_d()),
             "gram_mode": None, "config_hash": None,
             "backend": jax.default_backend(),
-            "retries": None, "degraded_blocks": None}
+            "retries": None, "degraded_blocks": None,
+            "telemetry": None, "trace_path": None}
 
 
 def _provenance(exp: Experiment, plan: RoutePlan) -> Dict[str, Any]:
@@ -64,6 +67,10 @@ def _provenance(exp: Experiment, plan: RoutePlan) -> Dict[str, Any]:
         # runner overwrites these from the run's FaultStats
         "retries": None,
         "degraded_blocks": None,
+        # telemetry (repro.obs): the flat metrics summary + trace artifact
+        # path, filled by run_experiment when Exec.telemetry/trace_dir is on
+        "telemetry": None,
+        "trace_path": None,
     }
 
 
@@ -84,18 +91,49 @@ def _shuffle_seeds(seed: Seed, n_shuffles: int) -> Tuple[int, ...]:
     return seeds
 
 
+def _seed_tag(seed: Seed) -> str:
+    if isinstance(seed, (int, np.integer)):
+        return str(int(seed))
+    return "-".join(str(int(s)) for s in seed)
+
+
+def _finalize_telemetry(exp: Experiment, tel: "obs.Telemetry", seed: Seed,
+                        report: Report) -> None:
+    """Merge the flat metrics summary (and trace artifact path) into the
+    provenance block.  The trace filename is a pure function of
+    (config hash, seed) -- no calendar time in artifacts (reprolint D104)."""
+    if not tel.enabled:
+        return
+    prov = report.provenance
+    prov["telemetry"] = obs.metrics_summary(tel)
+    if exp.exec.trace_dir is not None:
+        stem = (f"trace_{prov.get('config_hash') or 'run'}"
+                f"_s{_seed_tag(seed)}.json")
+        prov["trace_path"] = obs.write_trace(
+            os.path.join(exp.exec.trace_dir, stem), tel)
+
+
 def run_experiment(exp: Experiment, seed: Seed = 0) -> Report:
+    tel = obs.telemetry(exp.exec.telemetry or exp.exec.trace_dir is not None)
     plan = route(exp)
+    # the router's decision, as a trace event: which path served and why a
+    # batched path was (or was not) declined
+    tel.event("route", path=plan.path, driver=plan.driver,
+              engine=plan.engine, fallback_reason=plan.reason)
     if plan.reason is not None:
         _LOG.info("falling back to the sequential %r path: %s",
                   plan.path, plan.reason)
-    if plan.path == "cohort":
-        return _run_cohort_path(exp, seed, plan)
-    if plan.path == "sweep":
-        return _run_sweep_path(exp, seed, plan)
-    if plan.path == "grid":
-        return _run_grid_path(exp, seed, plan)
-    return _run_single_path(exp, seed, plan)
+    with tel.span("experiment", path=plan.path):
+        if plan.path == "cohort":
+            report = _run_cohort_path(exp, seed, plan, tel)
+        elif plan.path == "sweep":
+            report = _run_sweep_path(exp, seed, plan)
+        elif plan.path == "grid":
+            report = _run_grid_path(exp, seed, plan, tel)
+        else:
+            report = _run_single_path(exp, seed, plan, tel)
+    _finalize_telemetry(exp, tel, seed, report)
+    return report
 
 
 # ---------------------------------------------------------------------------
@@ -103,14 +141,16 @@ def run_experiment(exp: Experiment, seed: Seed = 0) -> Report:
 # ---------------------------------------------------------------------------
 
 
-def _run_single_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
+def _run_single_path(exp: Experiment, seed: Seed, plan: RoutePlan,
+                     tel: "obs.Telemetry" = obs.NULL_TELEMETRY) -> Report:
     cfg = as_mocha_config(exp, seed=_scalar_seed(seed))
     res = _run_mocha(exp.problem.train, exp.method.regularizers[0], cfg,
                      omega0=exp.method.omega0,
                      budget_fn=exp.method.budget_fn,
                      engine=exp.exec.resolve_engine(),
                      trace=exp.systems.trace,
-                     state0=exp.exec.state0)
+                     state0=exp.exec.state0,
+                     telemetry=tel)
     evaluation = None
     if exp.eval.holdout is not None:
         from repro.core.dual import FederatedData
@@ -146,7 +186,8 @@ def _run_sweep_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
                   evaluation=_grid_eval(exp, res.W))
 
 
-def _run_grid_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
+def _run_grid_path(exp: Experiment, seed: Seed, plan: RoutePlan,
+                   tel: "obs.Telemetry" = obs.NULL_TELEMETRY) -> Report:
     """Sequential fallback: every (regularizer, shuffle) cell is one core-
     driver run -- any engine, any clock policy, any regularizer mix.
 
@@ -174,11 +215,13 @@ def _run_grid_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
         cfg = as_mocha_config(exp, seed=seeds[si],
                               record_every=max(1, exp.method.rounds))
         for ri, reg in enumerate(regs):
-            res = _run_mocha(data_s, reg, cfg,
-                             omega0=exp.method.omega0,
-                             budget_fn=exp.method.budget_fn,
-                             engine=engine,
-                             state0=exp.exec.state0)
+            with tel.span("grid.cell", shuffle=si, reg=ri):
+                res = _run_mocha(data_s, reg, cfg,
+                                 omega0=exp.method.omega0,
+                                 budget_fn=exp.method.budget_fn,
+                                 engine=engine,
+                                 state0=exp.exec.state0,
+                                 telemetry=tel)
             W[ri, si] = res.W
             omega[ri, si] = res.omega
             dual[ri, si] = res.final("dual")
@@ -195,11 +238,13 @@ def _run_grid_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
 # ---------------------------------------------------------------------------
 
 
-def _run_cohort_path(exp: Experiment, seed: Seed, plan: RoutePlan) -> Report:
+def _run_cohort_path(exp: Experiment, seed: Seed, plan: RoutePlan,
+                     tel: "obs.Telemetry" = obs.NULL_TELEMETRY) -> Report:
     from repro.cohort.driver import _run_cohort
     s = _scalar_seed(seed)
     cfg = as_cohort_config(exp, seed=s)
-    res = _run_cohort(exp.problem.population, exp.method.regularizers[0], cfg)
+    res = _run_cohort(exp.problem.population, exp.method.regularizers[0], cfg,
+                      telemetry=tel)
     evaluation = None
     if exp.eval.holdout_clients > 0:
         evaluation = eval_mod.evaluate_cohort(

@@ -17,10 +17,12 @@ from repro.core.evaluate import EvalReport
 
 #: keys every provenance block carries (pinned by tests/test_api_surface.py)
 #: -- retries/degraded_blocks are the fault accounting (None outside the
-#: cohort path, which is the only one that retries/degrades)
+#: cohort path, which is the only one that retries/degrades);
+#: telemetry/trace_path are the observability block (flat metrics summary
+#: and Chrome-trace artifact path, None unless Exec.telemetry/trace_dir)
 PROVENANCE_KEYS = ("path", "driver", "engine", "fallback_reason",
                    "gram_max_d", "gram_mode", "config_hash", "backend",
-                   "retries", "degraded_blocks")
+                   "retries", "degraded_blocks", "telemetry", "trace_path")
 
 
 @dataclasses.dataclass

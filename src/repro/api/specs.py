@@ -227,6 +227,15 @@ class Exec:
     #: restore the latest snapshot under ``checkpoint_dir`` and continue
     #: (bit-identical to the uninterrupted run; config-hash validated)
     resume: bool = False
+    #: record runtime telemetry (repro.obs): per-worker span traces with
+    #: wall AND simulated clocks, plus a counters/histograms registry
+    #: flattened into ``Report.provenance["telemetry"]``.  Telemetry only
+    #: READS state -- results are bit-identical on or off
+    telemetry: bool = False
+    #: write the Chrome trace-event JSON (chrome://tracing / Perfetto)
+    #: under this directory (``trace_<config_hash>_s<seed>.json``, path in
+    #: ``Report.provenance["trace_path"]``); setting it implies telemetry
+    trace_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.driver not in DRIVERS:
@@ -375,6 +384,8 @@ def as_cohort_config(exp: Experiment, seed: int = 0):
         checkpoint_every=exp.exec.checkpoint_every,
         checkpoint_dir=exp.exec.checkpoint_dir,
         resume=exp.exec.resume,
+        telemetry=bool(exp.exec.telemetry or exp.exec.trace_dir is not None),
+        trace_dir=exp.exec.trace_dir,
         inner=inner,
     )
 

@@ -65,6 +65,7 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cohort.omega import ClusterOmega, StalenessBoundedMerger
 from repro.cohort.packing import CohortPacker
 from repro.cohort.population import Population
@@ -126,6 +127,10 @@ class CohortConfig:
     checkpoint_every: int = 0          # blocks between snapshots (0 = off)
     checkpoint_dir: Optional[str] = None  # where step_<block>.ckpt land
     resume: bool = False               # restore latest snapshot, continue
+    # -- telemetry (repro.obs); READS state only, so the off path (the
+    # -- default) is bit-identical to the instrumented-but-disabled run
+    telemetry: bool = False            # record spans + metrics for this run
+    trace_dir: Optional[str] = None    # Chrome trace JSON output directory
     #: the per-block solver view; engine shards the COHORT, never the
     #: population
     inner: MochaConfig = dataclasses.field(default_factory=MochaConfig)
@@ -214,7 +219,8 @@ def run_mocha_cohort(pop: Population, reg: Regularizer,
                   n_pad=cfg.n_pad, overlap=cfg.overlap,
                   staleness=cfg.staleness, max_retries=cfg.max_retries,
                   degrade=cfg.degrade, checkpoint_every=cfg.checkpoint_every,
-                  checkpoint_dir=cfg.checkpoint_dir, resume=cfg.resume),
+                  checkpoint_dir=cfg.checkpoint_dir, resume=cfg.resume,
+                  telemetry=cfg.telemetry, trace_dir=cfg.trace_dir),
         eval=Eval(record_every=cfg.record_every))
     return exp.run(cfg.seed).result
 
@@ -285,13 +291,23 @@ class _BlockLoop:
     thread).
     """
 
-    def __init__(self, pop: Population, reg: Regularizer, cfg: CohortConfig):
+    def __init__(self, pop: Population, reg: Regularizer, cfg: CohortConfig,
+                 telemetry: Optional[obs.Telemetry] = None):
         m, spec = pop.m, pop.spec
         self.cfg, self.reg = cfg, reg
         self.n_pad = int(cfg.n_pad or spec.pad_width)
         self.d = spec.d
+        # telemetry: launch-time constants (readable from any thread); the
+        # per-worker VIEWS route each stage's spans to its own lock-free
+        # buffer, so the instruments below never share a writing thread
+        self.tel = (telemetry if telemetry is not None
+                    else obs.telemetry(cfg.telemetry))
+        self.tel_pack = self.tel.for_worker("pack")
+        self.tel_solve = self.tel.for_worker("solve")
         self.state = ClusterOmega(m, cfg.clusters, spec.d, reg, eta=cfg.eta,
-                                  cache_clients=cfg.cache_clients)  # owner: main
+                                  cache_clients=cfg.cache_clients,
+                                  metrics=(self.tel.metrics if self.tel.enabled
+                                           else None))  # owner: main
         self.merger = StalenessBoundedMerger(
             self.state, reg, omega_update_every=cfg.omega_update_every,
             staleness=cfg.staleness)  # owner: main
@@ -310,6 +326,11 @@ class _BlockLoop:
         # 1) and the sampled clients' multipliers are injected per block
         slot_cfg = dataclasses.replace(sys_cfg, rate_lo=1.0, rate_hi=1.0)
         self.trace = SystemsTrace(cfg.cohort, spec.d, slot_cfg)  # owner: solve
+        # the simulated-clock column on every span: a pure READ of the
+        # trace clock (closure over the local, not self -- no cross-owner
+        # attribute access from worker threads)
+        trace = self.trace
+        self.tel.set_sim_clock(lambda: trace.elapsed_s)
 
         self.inner = cfg.inner_config()
         self.packer = CohortPacker(pop, cfg.cohort, self.n_pad)  # owner: pack
@@ -355,7 +376,7 @@ class _BlockLoop:
                     "checkpoint_dir")
             self._ckpt = CohortCheckpointer(
                 cfg.checkpoint_dir, cfg.checkpoint_every,
-                run_fingerprint(pop, reg, cfg))
+                run_fingerprint(pop, reg, cfg), telemetry=self.tel)
         if cfg.resume:
             # workers are not running yet: restore writes every owned field
             # from the latest snapshot, then the loops start at the frontier
@@ -374,6 +395,9 @@ class _BlockLoop:
         recomputing it here would break resume bit-identity.
         """
         ids, dropped = self.schedule.ids[b], self.schedule.dropped[b]
+        # merge-frontier staleness this launch observes (0 = fully fresh)
+        self.tel.histogram("launch_staleness").observe(
+            b - 1 - self.merger.merged_through)
         snap = self._resume_snaps.pop(b, None)
         if snap is not None:
             alpha0, omega0 = snap
@@ -403,7 +427,7 @@ class _BlockLoop:
             budget_fn=drop_masked_budgets(
                 inner.budget, np.broadcast_to(dropped, (cfg.inner_rounds,
                                                         cfg.cohort))),
-            trace=self.trace, state0=warm)
+            trace=self.trace, state0=warm, telemetry=self.tel_solve)
         budgets = np.asarray(res.round_budgets)
         return _SolvedBlock(
             W=np.asarray(res.W), alpha=np.asarray(res.state.alpha),
@@ -426,18 +450,25 @@ class _BlockLoop:
         """
         ids = self.schedule.ids[b]
         penalty, fails, err = 0.0, 0, None
-        for a in range(self.max_attempts):
-            if self.plan is not None and self.plan.pack_fails(b, a):
-                err = InjectedFault("pack", b, a)
-            else:
-                try:
-                    data, sizes = self.packer.pack(ids)
-                    return _PackedBlock(data, sizes, penalty, fails)
-                except Exception as e:  # noqa: BLE001 -- retried, then
-                    err = e             # raised/degraded below (never dropped)
-            fails += 1
-            penalty += (self.plan.backoff(a) if self.plan is not None
-                        else backoff_delay(a))
+        with self.tel_pack.span("pack", block=b) as sp:
+            for a in range(self.max_attempts):
+                if self.plan is not None and self.plan.pack_fails(b, a):
+                    err = InjectedFault("pack", b, a)
+                else:
+                    try:
+                        data, sizes = self.packer.pack(ids)
+                        sp.set(attempts=a + 1)
+                        self.tel_pack.counter("blocks_packed").inc()
+                        return _PackedBlock(data, sizes, penalty, fails)
+                    except Exception as e:  # noqa: BLE001 -- retried, then
+                        err = e  # raised/degraded below (never dropped)
+                fails += 1
+                backoff = (self.plan.backoff(a) if self.plan is not None
+                           else backoff_delay(a))
+                penalty += backoff
+                self.tel_pack.event("retry", seam="pack", block=b, attempt=a,
+                                    backoff_s=backoff)
+            sp.set(attempts=self.max_attempts, exhausted=True)
         if not self.cfg.degrade:
             raise BlockFailure(b, "pack", err)
         return _PackedBlock(None, np.zeros(self.cfg.cohort, np.int64),
@@ -460,22 +491,31 @@ class _BlockLoop:
         s: Optional[_SolvedBlock] = None
         fails, err = 0, None
         if packed.data is not None:
-            for a in range(self.max_attempts):
-                if self.plan is not None and self.plan.solve_fails(b, a):
-                    err = InjectedFault("solve", b, a)
+            with self.tel_solve.span("solve", block=b,
+                                     pack_penalty_s=packed.penalty_s) as sp:
+                for a in range(self.max_attempts):
+                    if self.plan is not None and self.plan.solve_fails(b, a):
+                        err = InjectedFault("solve", b, a)
+                    else:
+                        try:
+                            s = self.solve(b, packed.data, ids, dropped,
+                                           alpha0_np, omega0)
+                            sp.set(attempts=a + 1)
+                            break
+                        except Exception as e:  # noqa: BLE001 -- retried,
+                            err = e  # then raised/degraded (never dropped)
+                            if self.trace.mid_round:
+                                raise BlockFailure(b, "solve", e) from e
+                    fails += 1
+                    backoff = (self.plan.backoff(a) if self.plan is not None
+                               else backoff_delay(a))
+                    self.trace.charge(backoff)
+                    self.tel_solve.event("retry", seam="solve", block=b,
+                                         attempt=a, backoff_s=backoff)
+                if s is None:
+                    sp.set(attempts=self.max_attempts, exhausted=True)
                 else:
-                    try:
-                        s = self.solve(b, packed.data, ids, dropped,
-                                       alpha0_np, omega0)
-                        break
-                    except Exception as e:  # noqa: BLE001 -- retried, then
-                        err = e             # raised/degraded (never dropped)
-                        if self.trace.mid_round:
-                            raise BlockFailure(b, "solve", e) from e
-                fails += 1
-                self.trace.charge(self.plan.backoff(a)
-                                  if self.plan is not None
-                                  else backoff_delay(a))
+                    self.tel_solve.counter("blocks_solved").inc()
         if s is None:
             if not self.cfg.degrade:
                 raise BlockFailure(b, "solve", err)
@@ -505,9 +545,11 @@ class _BlockLoop:
         cfg = self.cfg
         self.trace.set_rate_scale(self.rate_mult[ids])
         zeros = np.zeros(cfg.cohort, np.int64)
-        for _ in range(cfg.inner_rounds):
-            self.trace.begin_round()
-            self.trace.commit(zeros)
+        with self.tel_solve.span("degrade", block=b,
+                                 inner_rounds=cfg.inner_rounds):
+            for _ in range(cfg.inner_rounds):
+                self.trace.begin_round()
+                self.trace.commit(zeros)
         return _SolvedBlock(
             W=np.zeros((cfg.cohort, self.d), np.float32),
             alpha=np.zeros((cfg.cohort, self.n_pad), np.float32),
@@ -518,36 +560,49 @@ class _BlockLoop:
     def fold(self, b: int, ids: np.ndarray, sizes: np.ndarray,
              s: _SolvedBlock) -> None:  # worker: main
         """MAIN THREAD: fold block b (schedule order, via the merger)."""
-        if s.degraded:
-            # a degraded block solved nothing: record the last real metrics
-            # (carried forward, like a flat-lined monitor) -- the state
-            # update below is a no-op because participated is all False
-            self.stats.degraded_blocks += 1
-            s = dataclasses.replace(
-                s, dual=self._last_metrics[0], primal=self._last_metrics[1],
-                gap=self._last_metrics[2])
-        else:
-            self._last_metrics = (s.dual, s.primal, s.gap)
-        self.stats.retries += s.retries + s.pack_retries
-        self.participation[ids[s.participated]] += 1
-        self.merger.fold(b, ids, s.W, s.alpha, sizes, s.participated)
-        new = ids[s.participated & ~self.seen[ids]]
-        self.seen[new] = True
-        self.n_seen += new.size
-        if self.record[b]:
-            h = self.history
-            h["round"].append(b)
-            h["dual"].append(s.dual)
-            h["primal"].append(s.primal)
-            h["gap"].append(s.gap)
-            h["time"].append(s.elapsed_s)
-            h["round_max_steps"].append(s.max_steps)
-            h["unique_clients"].append(self.n_seen)
-        if self._ckpt is not None:
-            self._last_clock = s.clock
-            self._launch_snaps.pop(b, None)
-            if self._ckpt.due(b):
-                self._ckpt.save(self, b)
+        with self.tel.span("fold", block=b, degraded=s.degraded,
+                           staleness=b - 1 - self.merger.merged_through):
+            if s.degraded:
+                # a degraded block solved nothing: record the last real
+                # metrics (carried forward, like a flat-lined monitor) --
+                # the state update below is a no-op because participated is
+                # all False.  The carry-forward is announced, not silent:
+                # history analysis can tell a flat-lined row from a real one
+                self.stats.degraded_blocks += 1
+                self.tel.counter("blocks_degraded").inc()
+                self.tel.counter("degraded_metrics_carried").inc()
+                self.tel.event("degraded_metrics_carried", block=b,
+                               dual=self._last_metrics[0],
+                               primal=self._last_metrics[1],
+                               gap=self._last_metrics[2])
+                s = dataclasses.replace(
+                    s, dual=self._last_metrics[0],
+                    primal=self._last_metrics[1], gap=self._last_metrics[2])
+            else:
+                self._last_metrics = (s.dual, s.primal, s.gap)
+            self.stats.retries += s.retries + s.pack_retries
+            if s.retries + s.pack_retries:
+                self.tel.counter("retries").inc(s.retries + s.pack_retries)
+            self.tel.counter("blocks_folded").inc()
+            self.participation[ids[s.participated]] += 1
+            self.merger.fold(b, ids, s.W, s.alpha, sizes, s.participated)
+            new = ids[s.participated & ~self.seen[ids]]
+            self.seen[new] = True
+            self.n_seen += new.size
+            if self.record[b]:
+                h = self.history
+                h["round"].append(b)
+                h["dual"].append(s.dual)
+                h["primal"].append(s.primal)
+                h["gap"].append(s.gap)
+                h["time"].append(s.elapsed_s)
+                h["round_max_steps"].append(s.max_steps)
+                h["unique_clients"].append(self.n_seen)
+            if self._ckpt is not None:
+                self._last_clock = s.clock
+                self._launch_snaps.pop(b, None)
+                if self._ckpt.due(b):
+                    self._ckpt.save(self, b)
 
     def checkpoint_on_failure(self) -> None:  # worker: main
         """Force-save the merge frontier before a failure propagates.
@@ -621,6 +676,10 @@ def _run_blocks_pipelined(loop: _BlockLoop, rounds: int, overlap: int,
     in_flight: deque = deque()   # (block, ids, sizes, future)
     try:
         for b in range(start, rounds):
+            # queue depths at each launch: how full the pack prefetch and
+            # solved-but-unmerged windows actually ran (pipeline health)
+            loop.tel.histogram("pack_queue_depth").observe(len(pack_q))
+            loop.tel.histogram("in_flight_depth").observe(len(in_flight))
             while len(in_flight) > staleness:
                 fb, fids, fsizes, fut = in_flight.popleft()
                 loop.fold(fb, fids, fsizes, fut.result())
@@ -648,8 +707,8 @@ def _run_blocks_pipelined(loop: _BlockLoop, rounds: int, overlap: int,
     solves.shutdown()
 
 
-def _run_cohort(pop: Population, reg: Regularizer,
-                cfg: CohortConfig) -> CohortRunResult:
+def _run_cohort(pop: Population, reg: Regularizer, cfg: CohortConfig,
+                telemetry: Optional[obs.Telemetry] = None) -> CohortRunResult:
     """Run cross-device MOCHA: ``cfg.rounds`` sampled-cohort blocks.
 
     ``reg`` plays its usual two roles, both in cohort/cluster space: its
@@ -666,7 +725,7 @@ def _run_cohort(pop: Population, reg: Regularizer,
         raise ValueError(f"need overlap >= 1, got {cfg.overlap}")
     if cfg.staleness < 0:
         raise ValueError(f"need staleness >= 0, got {cfg.staleness}")
-    loop = _BlockLoop(pop, reg, cfg)
+    loop = _BlockLoop(pop, reg, cfg, telemetry=telemetry)
     if cfg.overlap > 1 or cfg.staleness > 0:
         _run_blocks_pipelined(loop, cfg.rounds, cfg.overlap, cfg.staleness)
     else:

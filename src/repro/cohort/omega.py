@@ -41,7 +41,7 @@ class ClusterOmega:
     """Factored relationship + model state for an m-client population."""
 
     def __init__(self, m: int, k: int, d: int, reg: Regularizer,
-                 eta: float = 0.5, cache_clients: int = 4096):
+                 eta: float = 0.5, cache_clients: int = 4096, metrics=None):
         if k < 1:
             raise ValueError(f"need k >= 1 clusters, got {k}")
         self.m, self.k, self.d, self.eta = m, k, d, float(eta)
@@ -58,6 +58,13 @@ class ClusterOmega:
         #: client id -> (alpha_t (n_t,) float32, w_delta (d,) float32)
         self._cache: "OrderedDict[int, Tuple[np.ndarray, np.ndarray]]" = (
             OrderedDict())  # owner: main
+        #: LRU hit-rate instruments (repro.obs registry; None = inert).
+        #: warm-start reads run on the MAIN thread only, matching the
+        #: registry's single-writer-per-instrument discipline
+        self._cache_hits = (None if metrics is None
+                            else metrics.counter("omega_cache_hits"))
+        self._cache_misses = (None if metrics is None
+                              else metrics.counter("omega_cache_misses"))
 
     # -- cohort-facing views (all cohort-sized, never population-sized) -----
 
@@ -72,11 +79,16 @@ class ClusterOmega:
         or evicted clients (an evicted client restarts cold -- SDCA loses
         the warm start, not correctness)."""
         alpha = np.zeros((len(ids), n_pad), np.float32)
+        hits = 0
         for slot, t in enumerate(np.asarray(ids, np.int64)):
             hit = self._cache.get(int(t))
             if hit is not None:
+                hits += 1
                 row = hit[0]
                 alpha[slot, :row.shape[0]] = row
+        if self._cache_hits is not None:
+            self._cache_hits.inc(hits)
+            self._cache_misses.inc(len(ids) - hits)
         return alpha
 
     def client_weights(self, ids: np.ndarray) -> np.ndarray:  # worker: main

@@ -51,11 +51,14 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.train import checkpoint as _ckpt
+from repro.utils.timing import tick
 
 #: domain-separation tag for the fault plan's SeedSequence entropy
 _FAULT_STREAM = 0x666C74   # "flt"
@@ -244,11 +247,14 @@ def run_fingerprint(pop: Any, reg: Any, cfg: Any) -> str:
     checkpoint cadence/location, resume flag): a run interrupted by an
     injected crash must be resumable with the fault injection removed and
     the cadence changed -- those knobs alter when state is saved, never
-    what is computed.
+    what is computed.  The telemetry knobs are normalized out for the same
+    reason: observation never changes what is computed (the repro.obs
+    determinism contract), so a run must be resumable with tracing toggled.
     """
     base = dataclasses.replace(
         cfg, faults=None, max_retries=0, degrade=False,
-        checkpoint_every=0, checkpoint_dir=None, resume=False)
+        checkpoint_every=0, checkpoint_dir=None, resume=False,
+        telemetry=False, trace_dir=None)
     ident = (dataclasses.astuple(pop.spec), int(pop.seed),
              type(reg).__name__,
              dataclasses.asdict(reg) if dataclasses.is_dataclass(reg)
@@ -286,7 +292,8 @@ class CohortCheckpointer:
     failure path (force), so every snapshot is a consistent frontier state.
     """
 
-    def __init__(self, directory: str, every: int, fingerprint: str):
+    def __init__(self, directory: str, every: int, fingerprint: str,
+                 telemetry: Optional[obs.Telemetry] = None):
         if not directory:
             raise ValueError(
                 "checkpointing needs CohortConfig.checkpoint_dir")
@@ -295,6 +302,9 @@ class CohortCheckpointer:
         self.directory = str(directory)
         self.every = int(every)
         self.fingerprint = str(fingerprint)
+        # save points run on the MAIN thread (fold / the failure path), so
+        # the checkpoint instruments below are single-writer like the rest
+        self._tel = telemetry if telemetry is not None else obs.NULL_TELEMETRY
 
     # -- schema -------------------------------------------------------------
 
@@ -383,7 +393,17 @@ class CohortCheckpointer:
 
     def save(self, loop: Any, block: int) -> str:
         """Atomic snapshot of the frontier state after folding ``block``."""
-        return _ckpt.save(self.directory, block, self._snapshot(loop, block))
+        with self._tel.span("checkpoint", block=block) as sp:
+            t0 = tick()
+            path = _ckpt.save(self.directory, block,
+                              self._snapshot(loop, block))
+            save_s = tick() - t0
+            size = os.path.getsize(path)
+            sp.set(bytes=size)
+            self._tel.counter("checkpoint_saves").inc()
+            self._tel.counter("checkpoint_bytes").inc(size)
+            self._tel.histogram("checkpoint_save_s").observe(save_s)
+        return path
 
     def due(self, block: int) -> bool:
         """Cadence: save after folding every ``every``-th block."""

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import dual as dual_mod
 from repro.core import systems_model
 from repro.core.dual import DualState, FederatedData
@@ -162,6 +163,7 @@ def _run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
                engine: Optional[RoundEngine] = None,
                trace: Optional[SystemsTrace] = None,
                state0: Optional[DualState] = None,
+               telemetry: Optional["obs.Telemetry"] = None,
                ) -> RunResult:
     """Run Algorithm 1 on the configured round engine (the core driver).
 
@@ -183,6 +185,13 @@ def _run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
     (``RoundEngine.supports_scan``) and falls back to the Python round loop
     otherwise; ``scan`` / ``loop`` force one path.  The two drivers are
     bit-identical on a fixed seed.
+
+    ``telemetry`` is an optional ``repro.obs.Telemetry`` (cohort blocks pass
+    their solve-worker view; the single path passes the run's main view):
+    the whole run gets a driver span, and the scanned driver additionally
+    records its presample / per-segment dispatch (first dispatch = trace +
+    compile) / host-pull phases.  Telemetry only READS state -- results are
+    bit-identical with it on, off, or absent.
     """
     loss = get_loss(cfg.loss)
     validate_assumption2(cfg.budget)
@@ -212,14 +221,22 @@ def _run_mocha(data: FederatedData, reg: Regularizer, cfg: MochaConfig,
         sys_cfg = cfg.systems or SystemsConfig(network=cfg.network)
         trace = SystemsTrace(m, data.d, sys_cfg)
 
-    run = (_run_scanned if cfg.driver != "loop" and eng.supports_scan
-           else _run_loop)
-    return run(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
-               max_steps, budget_fn, gram)
+    tel = telemetry if telemetry is not None else obs.NULL_TELEMETRY
+    if tel.enabled:
+        # pure READ of the simulated clock; re-binding to the same shared
+        # trace (the cohort case) is idempotent
+        tel.set_sim_clock(lambda: trace.elapsed_s)
+    scanned = cfg.driver != "loop" and eng.supports_scan
+    run = _run_scanned if scanned else _run_loop
+    with tel.span("mocha.run", rounds=cfg.rounds, engine=eng.name,
+                  driver="scan" if scanned else "loop"):
+        return run(data, reg, cfg, loss, eng, trace, state, omega, abar, K,
+                   q_t, max_steps, budget_fn, gram, tel)
 
 
 def _run_loop(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
-              max_steps, budget_fn, gram=None) -> RunResult:
+              max_steps, budget_fn, gram=None,
+              tel=obs.NULL_TELEMETRY) -> RunResult:
     """Python round loop: one engine dispatch + one host sync per round."""
     m = data.m
     key = jax.random.PRNGKey(cfg.seed)
@@ -297,7 +314,8 @@ def _scan_rounds(round_fn, loss, max_steps, gram, data, state, K, abar, q_t,
 
 
 def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
-                 max_steps, budget_fn, gram=None) -> RunResult:
+                 max_steps, budget_fn, gram=None,
+                 tel=obs.NULL_TELEMETRY) -> RunResult:
     """Device-resident driver: the W-round loop runs inside ``lax.scan``.
 
     Budgets (and semi_sync deadline caps) are round-indexed, so the whole
@@ -307,20 +325,22 @@ def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
     the end and replayed through the SystemsTrace (DESIGN.md section 6).
     """
     m, rounds = data.m, cfg.rounds
-    budget_keys, round_keys = round_key_schedule(
-        jax.random.PRNGKey(cfg.seed), rounds)
-    if budget_fn is not None:
-        budgets_all = jnp.stack([budget_fn(budget_keys[h], data.n_t, h)
-                                 for h in range(rounds)])
-    else:
-        budgets_all = presample_budgets(cfg.budget, budget_keys, data.n_t)
-    budgets_all = jnp.minimum(budgets_all, max_steps)
-    caps = trace.presample_caps(rounds)
-    if caps is not None:
-        # same pre-cast clamp as the loop driver (int64 caps can exceed int32)
-        caps = np.minimum(caps, max_steps)
-        budgets_all = jnp.minimum(budgets_all,
-                                  jnp.asarray(caps, budgets_all.dtype))
+    with tel.span("mocha.presample", rounds=rounds):
+        budget_keys, round_keys = round_key_schedule(
+            jax.random.PRNGKey(cfg.seed), rounds)
+        if budget_fn is not None:
+            budgets_all = jnp.stack([budget_fn(budget_keys[h], data.n_t, h)
+                                     for h in range(rounds)])
+        else:
+            budgets_all = presample_budgets(cfg.budget, budget_keys, data.n_t)
+        budgets_all = jnp.minimum(budgets_all, max_steps)
+        caps = trace.presample_caps(rounds)
+        if caps is not None:
+            # same pre-cast clamp as the loop driver (int64 caps can exceed
+            # int32)
+            caps = np.minimum(caps, max_steps)
+            budgets_all = jnp.minimum(budgets_all,
+                                      jnp.asarray(caps, budgets_all.dtype))
 
     record = _record_rounds(rounds, cfg.record_every)
     every = cfg.omega_update_every
@@ -335,10 +355,17 @@ def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
         tail_update = bool(every) and h_end % every == 0
         if tail_update and recs[-1]:
             recs[-1] = False  # metrics for an Omega round use the POST-update K
-        state, rows = _scan_rounds(round_fn, loss, max_steps, gram, data,
-                                   state, K, abar, q_t, cfg.gamma,
-                                   round_keys[h0:h_end],
-                                   budgets_all[h0:h_end], jnp.asarray(recs))
+        # the FIRST dispatch traces + compiles the scan program; later
+        # segments replay the jit cache and only pay async enqueue -- the
+        # span's `compile` tag is the compile-vs-execute split (execution
+        # itself drains under mocha.host_pull)
+        with tel.span("mocha.scan_dispatch", h0=h0, h_end=h_end,
+                      compile=not seg_slices):
+            state, rows = _scan_rounds(round_fn, loss, max_steps, gram, data,
+                                       state, K, abar, q_t, cfg.gamma,
+                                       round_keys[h0:h_end],
+                                       budgets_all[h0:h_end],
+                                       jnp.asarray(recs))
         seg_slices.append((h0, h_end, recs, rows))
         if tail_update:
             W = dual_mod.primal_weights(K, state.v)
@@ -350,8 +377,11 @@ def _run_scanned(data, reg, cfg, loss, eng, trace, state, omega, abar, K, q_t,
         h0 = h_end
 
     # single host transfer: executed budgets + stacked in-scan metric rows
-    executed = np.asarray(budgets_all).astype(np.int64)
-    trace.replay(executed)
+    # (np.asarray blocks on async dispatch, so this span is where device
+    # EXECUTION time surfaces -- the other half of the compile/execute split)
+    with tel.span("mocha.host_pull", rounds=rounds):
+        executed = np.asarray(budgets_all).astype(np.int64)
+        trace.replay(executed)
     # only THIS run's events: a pre-used trace already holds earlier rounds,
     # and times() is cumulative over all of them (loop-parity: the loop
     # records trace.elapsed_s, which also continues the prior clock)

@@ -37,7 +37,12 @@ def tick() -> float:
 
 
 def timed(fn: Callable[..., Any], *args: Any, **kw: Any) -> Tuple[Any, float]:
-    """``(fn(*args, **kw), elapsed_microseconds)`` of one call.
+    """``(fn(*args, **kw), elapsed)`` of one call, elapsed in MICROSECONDS.
+
+    The unit is microseconds (``(tick() - t0) * 1e6``), not seconds --
+    BENCH rows store ``*_us`` columns directly from this value; divide by
+    1e6 before comparing against ``tick()`` differences or any ``*_s``
+    quantity.  Pinned by ``tests/test_obs.py::test_timed_returns_microseconds``.
 
     NOTE: does not block on async dispatch; JAX callers must make ``fn``
     itself synchronize (``jax.block_until_ready``) for honest timings.

@@ -28,7 +28,7 @@ EXPECTED_FIELDS = {
              "state0", "cohort", "inner_rounds", "clusters", "eta",
              "cache_clients", "n_pad", "overlap", "staleness",
              "max_retries", "degrade", "checkpoint_every", "checkpoint_dir",
-             "resume"),
+             "resume", "telemetry", "trace_dir"),
     "Eval": ("record_every", "holdout", "holdout_clients", "metrics"),
     "Experiment": ("problem", "method", "systems", "exec", "eval"),
     "RoutePlan": ("path", "driver", "engine", "reason"),
@@ -46,7 +46,7 @@ EXPECTED_CONFIG_FIELDS = {
                    "network", "systems", "seed", "record_every", "n_pad",
                    "overlap", "staleness", "max_retries", "degrade",
                    "faults", "checkpoint_every", "checkpoint_dir", "resume",
-                   "inner"),
+                   "telemetry", "trace_dir", "inner"),
 }
 
 
@@ -75,5 +75,6 @@ def test_route_paths_and_provenance_keys_snapshot():
     assert api.PROVENANCE_KEYS == ("path", "driver", "engine",
                                    "fallback_reason", "gram_max_d",
                                    "gram_mode", "config_hash", "backend",
-                                   "retries", "degraded_blocks")
+                                   "retries", "degraded_blocks",
+                                   "telemetry", "trace_path")
     assert api.METRICS == ("error", "loss")

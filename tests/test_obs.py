@@ -1,0 +1,349 @@
+"""Runtime telemetry layer (repro.obs): tracer/metrics/export units, the
+off-path inertness and on-vs-off bit-identity guarantees, span coverage of
+the faulty overlapped cohort pipeline, and the summarize CLI."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.cohort import (CohortConfig, FaultConfig, Population,
+                          PopulationSpec)
+from repro.cohort.driver import _run_cohort
+from repro.core import BudgetConfig, MochaConfig, Probabilistic
+from repro.obs import summarize as summarize_mod
+from repro.utils import timing
+
+SPEC = PopulationSpec("t_obs", m=240, d=10, n_min=8, n_max=20, clusters=3)
+REG = Probabilistic(lam=1e-2, sigma2=10.0)
+
+
+def _cfg(**kw):
+    base = dict(rounds=6, cohort=12, clusters=3, dropout=0.2,
+                omega_update_every=2, record_every=1, seed=1,
+                inner=MochaConfig(budget=BudgetConfig(passes=1.0)))
+    base.update(kw)
+    return CohortConfig(**base)
+
+
+# -- tracer -----------------------------------------------------------------
+
+def test_null_telemetry_is_inert():
+    tel = obs.NULL_TELEMETRY
+    assert not tel.enabled
+    with tel.span("anything", block=3) as sp:
+        sp.set(more=1)
+    tel.event("retry", block=0)
+    tel.counter("c").inc(5)
+    tel.gauge("g").set(2.0)
+    tel.histogram("h").observe(1.0)
+    assert tel.tracer.spans() == {}
+    assert tel.tracer.count("anything") == 0
+    assert tel.metrics.summary() == {}
+    # disabled views are shared, not copied
+    assert tel.for_worker("pack") is tel
+    assert obs.telemetry(False) is tel
+
+
+def test_tracer_records_spans_per_worker():
+    tel = obs.telemetry()
+    assert tel.enabled
+    with tel.span("fold", block=0) as sp:
+        sp.set(degraded=False)
+    with tel.for_worker("pack").span("pack", block=0):
+        pass
+    tel.for_worker("solve").event("retry", seam="solve", block=0, attempt=0)
+    spans = tel.tracer.spans()
+    assert set(spans) == {"main", "pack", "solve"}
+    fold, = spans["main"]
+    assert fold.name == "fold"
+    assert fold.args == {"block": 0, "degraded": False}
+    assert fold.dur_s is not None and fold.dur_s >= 0.0
+    retry, = spans["solve"]
+    assert retry.dur_s is None            # events are instants
+    assert tel.tracer.count("pack") == 1
+    assert tel.tracer.count("nope") == 0
+
+
+def test_tracer_samples_sim_clock_alongside_wall():
+    tel = obs.telemetry()
+    sim = {"now": 5.0}
+    tel.set_sim_clock(lambda: sim["now"])
+    with tel.span("solve", block=1):
+        sim["now"] = 7.5
+    tel.event("retry", block=1)
+    sp, ev = tel.tracer.spans()["main"]
+    assert sp.sim_ts_s == 5.0 and sp.sim_dur_s == pytest.approx(2.5)
+    assert ev.sim_ts_s == 7.5 and ev.sim_dur_s is None
+
+
+# -- metrics ----------------------------------------------------------------
+
+def test_metrics_registry_summary():
+    tel = obs.telemetry()
+    tel.counter("blocks_folded").inc()
+    tel.counter("blocks_folded").inc(2)
+    tel.gauge("frontier").set(4.0)
+    tel.gauge("frontier").set(6.0)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        tel.histogram("depth").observe(v)
+    s = obs.metrics_summary(tel)
+    assert s["blocks_folded"] == 3
+    assert s["frontier.last"] == 6.0
+    assert s["depth.count"] == 4 and s["depth.total"] == 10.0
+    assert s["depth.p50"] == 2.0 and s["depth.p99"] == 4.0
+    # same name -> same instrument (get-or-create semantics)
+    assert tel.counter("blocks_folded") is tel.counter("blocks_folded")
+
+
+def test_percentile_nearest_rank():
+    from repro.obs.metrics import percentile
+    vals = [10.0, 20.0, 30.0, 40.0]
+    assert percentile(vals, 0.0) == 10.0
+    assert percentile(vals, 50.0) == 20.0
+    assert percentile(vals, 99.0) == 40.0
+    with pytest.raises(ValueError):
+        percentile([], 50.0)
+
+
+# -- chrome export ----------------------------------------------------------
+
+def _sample_tel():
+    tel = obs.telemetry()
+    clock = {"now": 0.0}
+    tel.set_sim_clock(lambda: clock["now"])
+    with tel.for_worker("pack").span("pack", block=0):
+        clock["now"] = 1.0
+    with tel.for_worker("solve").span("solve", block=0):
+        clock["now"] = 3.0
+    tel.for_worker("solve").event("retry", block=0, attempt=0)
+    with tel.span("fold", block=0):
+        pass
+    tel.counter("blocks_folded").inc()
+    return tel
+
+
+def test_chrome_trace_layout_and_schema():
+    doc = obs.to_chrome_trace(_sample_tel())
+    assert obs.validate_chrome_trace(doc) == []
+    names = {ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    assert names == {"main", "pack", "solve", "simulated-clock"}
+    wall = [ev for ev in doc["traceEvents"] if ev.get("cat") == "wall"]
+    sim = [ev for ev in doc["traceEvents"] if ev.get("cat") == "sim"]
+    assert {ev["name"] for ev in wall} == {"pack", "solve", "retry", "fold"}
+    # every span mirrors onto the single simulated-clock track
+    assert len(sim) == len(wall)
+    assert {ev["tid"] for ev in sim} == {100}
+    # sim timestamps are the simulated clock, not wall offsets
+    sim_solve, = (ev for ev in sim if ev["name"] == "solve")
+    assert sim_solve["ts"] == pytest.approx(1.0 * 1e6)
+    assert sim_solve["dur"] == pytest.approx(2.0 * 1e6)
+    assert doc["otherData"]["metrics"]["blocks_folded"] == 1
+
+
+def test_validate_chrome_trace_rejects_malformed():
+    assert obs.validate_chrome_trace([]) != []
+    assert obs.validate_chrome_trace({}) == ["traceEvents missing or not "
+                                             "a list"]
+    errs = obs.validate_chrome_trace({"traceEvents": [
+        {"ph": "Z", "name": "x", "pid": 1, "tid": 1},
+        {"ph": "X", "name": "x", "pid": 1, "tid": 1, "ts": 0.0, "dur": -1.0},
+        {"ph": "X", "name": 3, "pid": 1, "tid": "t", "ts": "now"},
+        {"ph": "M", "name": "process_name", "pid": 1, "tid": 1},
+    ]})
+    assert len(errs) == 7
+    assert any("negative dur" in e for e in errs)
+
+
+def test_wall_extent_uses_interval_union(tmp_path):
+    # nested + overlapping spans must not double-count busy time
+    def x(name, tid, ts, dur):
+        return {"ph": "X", "name": name, "cat": "wall", "pid": 1, "tid": tid,
+                "ts": ts, "dur": dur}
+    doc = {"traceEvents": [
+        {"ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+         "args": {"name": "main"}},
+        x("fold", 1, 0.0, 10.0), x("checkpoint", 1, 2.0, 4.0),  # nested
+        x("fold", 1, 20.0, 10.0),
+    ]}
+    ext = obs.wall_extent(doc, worker="main")
+    assert ext["span_s"] == pytest.approx(30.0 / 1e6)
+    assert ext["busy_s"] == pytest.approx(20.0 / 1e6)
+    assert obs.wall_extent(doc, worker="pack") == {"span_s": 0.0,
+                                                   "busy_s": 0.0}
+
+
+def test_write_trace_roundtrip(tmp_path):
+    path = obs.write_trace(str(tmp_path / "sub" / "t.json"), _sample_tel())
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert obs.validate_chrome_trace(doc) == []
+    assert not (tmp_path / "sub" / "t.json.tmp").exists()
+
+
+# -- the sanctioned wall clock (satellite: timing unit pin) -----------------
+
+def test_timed_returns_microseconds(monkeypatch):
+    reads = iter([2.0, 2.5])
+    monkeypatch.setattr(timing.time, "perf_counter", lambda: next(reads))
+    out, elapsed = timing.timed(lambda a: a + 1, 41)
+    assert out == 42
+    assert elapsed == pytest.approx(0.5e6)   # microseconds, NOT seconds
+
+
+# -- cohort integration -----------------------------------------------------
+
+def test_cohort_bit_identity_telemetry_on_vs_off():
+    """Exec.telemetry=True must not perturb one bit of the run: tracing
+    only READS state -- no RNG draw, no simulated-clock charge."""
+    pop = Population(SPEC, seed=0)
+    kw = dict(overlap=2, staleness=1, max_retries=1, degrade=True,
+              faults=FaultConfig(solve_fail_prob=0.3, seed=3))
+    plain = _run_cohort(pop, REG, _cfg(**kw))
+    traced = _run_cohort(pop, REG, _cfg(telemetry=True, **kw))
+    assert plain.history == traced.history
+    np.testing.assert_array_equal(plain.centroids, traced.centroids)
+    np.testing.assert_array_equal(plain.omega_k, traced.omega_k)
+    np.testing.assert_array_equal(plain.assign, traced.assign)
+    np.testing.assert_array_equal(plain.participation, traced.participation)
+
+
+def test_cohort_span_coverage_under_faults():
+    """Every pack/solve/fold/retry/degrade/checkpoint occurrence of a
+    faulty overlapped run appears in the trace, and the counters agree
+    with the run's own fault accounting."""
+    pop = Population(SPEC, seed=0)
+    tel = obs.telemetry()
+    cfg = _cfg(overlap=2, staleness=1, max_retries=1, degrade=True,
+               faults=FaultConfig(solve_fail_prob=0.25,
+                                  solve_fail_blocks=(3,), seed=5))
+    res = _run_cohort(pop, REG, cfg, telemetry=tel)
+    stats = res.fault_stats
+    assert stats.degraded_blocks >= 1 and stats.retries >= 1
+    tr = tel.tracer
+    assert tr.count("pack") == cfg.rounds
+    assert tr.count("solve") == cfg.rounds     # pack never exhausts here
+    assert tr.count("fold") == cfg.rounds
+    assert tr.count("degrade") == stats.degraded_blocks
+    assert tr.count("retry") == stats.retries
+    s = obs.metrics_summary(tel)
+    assert s["blocks_folded"] == cfg.rounds
+    assert s["blocks_degraded"] == stats.degraded_blocks
+    assert s["retries"] == stats.retries
+    assert s["blocks_solved"] == cfg.rounds - stats.degraded_blocks
+    # pipeline depth histograms observed once per block
+    assert s["pack_queue_depth.count"] == cfg.rounds
+    assert s["launch_staleness.p99"] <= cfg.staleness
+    # worker attribution: pack spans on the pack track, solves on solve
+    spans = tr.spans()
+    assert {sp.name for sp in spans["pack"]} <= {"pack", "retry"}
+    assert "solve" in {sp.name for sp in spans["solve"]}
+    assert "fold" in {sp.name for sp in spans["main"]}
+
+
+def test_degraded_metrics_carried_emits_event_and_counter():
+    """Satellite regression: a degraded block's carried-forward metrics are
+    VISIBLE -- one `degraded_metrics_carried` event tagged with the stale
+    values plus a matching counter, so silent staleness cannot recur."""
+    pop = Population(SPEC, seed=0)
+    dead = 2
+    tel = obs.telemetry()
+    res = _run_cohort(pop, REG, _cfg(
+        max_retries=1, degrade=True,
+        faults=FaultConfig(solve_fail_blocks=(dead,))), telemetry=tel)
+    assert res.fault_stats.degraded_blocks == 1
+    assert obs.metrics_summary(tel)["degraded_metrics_carried"] == 1
+    events = [sp for sp in tel.tracer.spans()["main"]
+              if sp.name == "degraded_metrics_carried"]
+    assert len(events) == 1
+    args = events[0].args
+    assert args["block"] == dead
+    h = res.history
+    # the event carries exactly the stale (previous block's) metrics
+    assert args["dual"] == h["dual"][dead - 1] == h["dual"][dead]
+    assert args["primal"] == h["primal"][dead - 1]
+    assert args["gap"] == h["gap"][dead - 1]
+
+
+def test_checkpoint_spans_record_bytes():
+    pop = Population(SPEC, seed=0)
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        tel = obs.telemetry()
+        _run_cohort(pop, REG, _cfg(checkpoint_every=2, checkpoint_dir=td),
+                    telemetry=tel)
+        saves = [sp for sp in tel.tracer.spans()["main"]
+                 if sp.name == "checkpoint"]
+        assert len(saves) == 3                 # blocks 2, 4, 6
+        assert all(sp.args["bytes"] > 0 for sp in saves)
+        s = obs.metrics_summary(tel)
+        assert s["checkpoint_saves"] == 3
+        assert s["checkpoint_bytes"] == sum(sp.args["bytes"] for sp in saves)
+        assert s["checkpoint_save_s.count"] == 3
+
+
+# -- api surface ------------------------------------------------------------
+
+def test_experiment_trace_artifact_and_provenance(tmp_path):
+    from repro.api import Exec, Experiment, Method, Problem
+    exp = Experiment(
+        problem=Problem(population=Population(SPEC, seed=0)),
+        method=Method(regularizers=[REG], rounds=4),
+        exec=Exec(cohort=12, clusters=3, overlap=2, staleness=1,
+                  trace_dir=str(tmp_path)),   # trace_dir implies telemetry
+    )
+    rep = exp.run(seed=0)
+    prov = rep.provenance
+    assert prov["telemetry"]["blocks_folded"] == 4
+    assert prov["trace_path"] == str(
+        tmp_path / f"trace_{prov['config_hash']}_s0.json")
+    with open(prov["trace_path"]) as fh:
+        doc = json.load(fh)
+    assert obs.validate_chrome_trace(doc) == []
+    wall = [ev["name"] for ev in doc["traceEvents"]
+            if ev.get("cat") == "wall"]
+    assert wall.count("fold") == 4 and "route" in wall
+    # rerun -> deterministic artifact name, so reruns overwrite in place
+    rep2 = exp.run(seed=0)
+    assert rep2.provenance["trace_path"] == prov["trace_path"]
+
+
+def test_telemetry_off_by_default_in_provenance():
+    from repro.api import Exec, Experiment, Method, Problem
+    from repro.data.synthetic import tiny_problem
+    train, _ = tiny_problem(m=4, n=16, d=5, seed=0)
+    exp = Experiment(problem=Problem(train=train),
+                     method=Method(regularizers=[REG], rounds=3))
+    rep = exp.run(seed=0)
+    assert rep.provenance["telemetry"] is None
+    assert rep.provenance["trace_path"] is None
+
+
+def test_run_fingerprint_normalizes_telemetry_knobs():
+    from repro.cohort.resilience import run_fingerprint
+    pop = Population(SPEC, seed=0)
+    base = run_fingerprint(pop, REG, _cfg())
+    assert run_fingerprint(pop, REG, _cfg(
+        telemetry=True, trace_dir="/tmp/x")) == base
+    assert run_fingerprint(pop, REG, _cfg(rounds=7)) != base
+
+
+# -- summarize CLI ----------------------------------------------------------
+
+def test_summarize_cli_renders_trace(tmp_path, capsys):
+    path = obs.write_trace(str(tmp_path / "t.json"), _sample_tel())
+    assert summarize_mod.main([path, "--strict"]) == 0
+    out = capsys.readouterr().out
+    for phase in ("pack", "solve", "fold"):
+        assert phase in out
+    assert "bubble fraction" in out
+    assert "blocks_folded = 1" in out
+
+
+def test_summarize_cli_strict_rejects_malformed(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"ph": "Z"}]}))
+    assert summarize_mod.main([str(bad), "--strict"]) == 1
+    assert summarize_mod.main([str(bad)]) == 0   # non-strict: warn only

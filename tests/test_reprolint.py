@@ -163,6 +163,51 @@ def test_d105_silent_fault_swallow_negative(tmp_path):
         """) == []
 
 
+def test_d106_obs_time_import_positive(tmp_path):
+    # inside repro.obs even an (unused) stdlib `time` import is banned --
+    # the package's wall clock comes only from repro.utils.timing
+    out = _lint(tmp_path, "src/repro/obs/tracer.py", """\
+        import time
+        from time import perf_counter
+        """)
+    assert _rules(out) == ["D106"]
+    assert len(out) == 2          # the import AND the from-import
+
+
+def test_d106_obs_internal_reach_positive(tmp_path):
+    out = _lint(tmp_path, "src/repro/cohort/foo.py", """\
+        from repro.obs.tracer import Tracer
+        from repro.obs import MetricsRegistry
+        from repro import obs
+        def f():
+            return obs.tracer.Span("x", "main")
+        """)
+    assert _rules(out) == ["D106"]
+    assert len(out) == 3          # two imports + the ad-hoc Span construction
+
+
+def test_d106_negative(tmp_path):
+    # the sanctioned surface: the facade factory/null object outside obs,
+    # timing-routed clock reads inside obs, export helpers via the facade
+    assert _lint(tmp_path, "src/repro/obs/tracer.py", """\
+        from repro.utils.timing import tick
+        def now():
+            return tick()
+        """) == []
+    assert _lint(tmp_path, "src/repro/cohort/foo.py", """\
+        from repro import obs
+        def f(enabled):
+            tel = obs.telemetry(enabled)
+            with tel.span("pack", block=0):
+                tel.counter("blocks_packed").inc()
+            return obs.metrics_summary(tel)
+        """) == []
+    # tests and scripts outside the scoped trees are not D106's business
+    assert _lint(tmp_path, "examples/foo.py", """\
+        from repro.obs.tracer import Tracer
+        """) == []
+
+
 # -- P family ---------------------------------------------------------------
 
 def test_p201_raw_gram_positive(tmp_path):

@@ -111,6 +111,83 @@ def test_driver_semi_sync_caps_budgets():
         10 * (cycle + float(np.max(ev.comm_s))))
 
 
+# -- resilience hooks: charge + clock_state (repro.cohort.resilience) -------
+
+_SEMI = SystemsConfig(policy="semi_sync", clock_cycle_s=0.01,
+                      rate_lo=0.5, rate_hi=1.0, comm_jitter=0.2, seed=9)
+
+
+def test_charge_consumes_no_rng_draws_under_presampled_caps():
+    """Out-of-round charges must leave the round-indexed cap stream
+    untouched: caps presampled BEFORE any charge must be exactly the caps
+    the later rounds draw, however much overhead is charged in between."""
+    trace = SystemsTrace(4, 6, _SEMI)
+    caps = trace.presample_caps(3)
+    assert caps is not None and caps.shape == (3, 4)
+    elapsed = 0.0
+    for r in range(3):
+        elapsed += trace.charge(0.25 * (r + 1))   # backoff before the round
+        live = trace.begin_round()
+        np.testing.assert_array_equal(live, caps[r])
+        elapsed += trace.commit(live)
+        elapsed += trace.charge(0.125)            # fold delay after
+    assert trace.elapsed_s == pytest.approx(elapsed)
+    # charges are pure clock advances: no round event, no busy time
+    assert len(trace.events) == 3
+    assert trace.summary()["rounds"] == 3
+
+
+def test_charge_guards():
+    trace = SystemsTrace(2, 4, _SEMI)
+    trace.begin_round()
+    with pytest.raises(RuntimeError, match="mid-round"):
+        trace.charge(1.0)
+    trace.commit(np.zeros(2))
+    with pytest.raises(ValueError, match=">= 0"):
+        trace.charge(-0.1)
+    assert trace.charge(0.0) == 0.0
+
+
+def test_clock_state_round_trip_semi_sync():
+    """restore_clock of a snapshot makes a fresh same-config trace redraw
+    the continuation bit-identically -- caps, durations, clock and busy
+    time -- with charges interleaved on both sides of the snapshot."""
+    a = SystemsTrace(5, 8, _SEMI)
+    for _ in range(2):
+        a.commit(np.full(5, 50))
+        a.charge(0.5)
+    snap = a.clock_state()
+    assert set(snap) == {"rng", "elapsed_s", "node_busy_s"}
+    assert snap["rng"].shape == (6,) and snap["rng"].dtype == np.uint64
+
+    b = SystemsTrace(5, 8, _SEMI)      # same config -> same static rates
+    b.restore_clock(snap)
+    assert b.elapsed_s == a.elapsed_s
+    np.testing.assert_array_equal(b.node_busy_s, a.node_busy_s)
+    for r in range(3):
+        cap_a, cap_b = a.begin_round(), b.begin_round()
+        np.testing.assert_array_equal(cap_a, cap_b)
+        steps = np.minimum(cap_a, 20 + r)
+        assert a.commit(steps) == b.commit(steps)
+        a.charge(0.125)
+        b.charge(0.125)
+    assert b.elapsed_s == a.elapsed_s
+    np.testing.assert_array_equal(b.node_busy_s, a.node_busy_s)
+    # the event log is NOT part of the snapshot: the resumed trace's
+    # events hold only the continuation rounds
+    assert len(a.events) == 5 and len(b.events) == 3
+
+
+def test_clock_state_mid_round_guard():
+    trace = SystemsTrace(3, 4, _SEMI)
+    snap = trace.clock_state()
+    trace.begin_round()
+    with pytest.raises(RuntimeError, match="mid-round"):
+        trace.clock_state()
+    with pytest.raises(RuntimeError, match="mid-round"):
+        trace.restore_clock(snap)
+
+
 def test_driver_records_trace_and_budgets():
     train, _ = tiny_problem(m=4, n=16, d=5, seed=1)
     res = run_mocha(train, REG, MochaConfig(

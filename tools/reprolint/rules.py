@@ -293,6 +293,89 @@ class D104BenchProvenanceTime(Rule):
                 yield ctx.finding(self, node, f"calendar-time read `{name}`")
 
 
+class D106TelemetryDiscipline(Rule):
+    id = "D106"
+    summary = ("telemetry discipline: repro.obs reads the wall clock only "
+               "through repro.utils.timing, and span/registry internals "
+               "never leave repro.obs (instrument through the Telemetry "
+               "facade)")
+    hint = ("inside src/repro/obs: import tick/timed from repro.utils.timing "
+            "instead of stdlib `time`; everywhere else: obtain telemetry via "
+            "obs.telemetry()/obs.NULL_TELEMETRY and emit through Telemetry's "
+            "span/event/counter methods -- never import or construct "
+            "Span/Tracer/MetricsRegistry directly (DESIGN.md section 11)")
+    scope = ("src/repro/*", "benchmarks/*", "tools/*")
+    exempt = ("tools/reprolint/*",)
+
+    #: submodules whose contents are package-private to repro.obs
+    INTERNAL_MODULES = ("repro.obs.tracer", "repro.obs.metrics",
+                        "repro.obs.export")
+    #: facade-level names that are still internals (only Telemetry views,
+    #: telemetry(), NULL_TELEMETRY and the export helpers are public)
+    INTERNAL_NAMES = {"Span", "Tracer", "NullTracer", "MetricsRegistry",
+                      "NullRegistry"}
+
+    @staticmethod
+    def _inside_obs(rel: str) -> bool:
+        return rel.startswith("src/repro/obs/")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if self._inside_obs(ctx.rel):
+            yield from self._check_inside(ctx)
+        else:
+            yield from self._check_outside(ctx)
+
+    def _check_inside(self, ctx: FileContext) -> Iterator[Finding]:
+        # D101 already bans time.* CALLS repo-wide; banning the import here
+        # keeps even an unused `import time` out of the telemetry package
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "time" or a.name.startswith("time."):
+                        yield ctx.finding(
+                            self, node, "stdlib `time` import inside "
+                            "repro.obs; wall clock comes only from "
+                            "repro.utils.timing")
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module == "time":
+                    yield ctx.finding(
+                        self, node, "import from stdlib `time` inside "
+                        "repro.obs; wall clock comes only from "
+                        "repro.utils.timing")
+
+    def _check_outside(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name in self.INTERNAL_MODULES:
+                        yield ctx.finding(
+                            self, node,
+                            f"import of obs internal module `{a.name}`")
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                mod = node.module or ""
+                if mod in self.INTERNAL_MODULES:
+                    yield ctx.finding(
+                        self, node,
+                        f"import from obs internal module `{mod}`")
+                elif mod == "repro.obs":
+                    for a in node.names:
+                        if a.name in self.INTERNAL_NAMES:
+                            yield ctx.finding(
+                                self, node,
+                                f"import of obs internal `{a.name}`; "
+                                "instrument through the Telemetry facade")
+        for node, name in self._calls(ctx):
+            if not name.startswith("repro.obs."):
+                continue
+            tail = name[len("repro.obs."):]
+            if (tail.split(".")[0] in ("tracer", "metrics", "export")
+                    or tail in self.INTERNAL_NAMES):
+                yield ctx.finding(
+                    self, node,
+                    f"ad-hoc obs internal call `{name}`; construct spans/"
+                    "metrics only through a Telemetry view")
+
+
 class D105SilentFaultSwallow(Rule):
     id = "D105"
     summary = ("silent fault swallowing; failures must be retried, "
@@ -617,6 +700,7 @@ class T302UntaggedOwnedWrite(_OwnershipRule):
 ALL_RULES: Tuple[Rule, ...] = (
     D101WallClockRead(), D102StdlibRandom(), D103UnseededNumpyRng(),
     D104BenchProvenanceTime(), D105SilentFaultSwallow(),
+    D106TelemetryDiscipline(),
     P201RawSelfGram(), P202ManualRowReduction(),
     P203ScanHostMaterialization(), P204LegacyEntryCall(),
     T301WrongWorkerAccess(), T302UntaggedOwnedWrite(),
