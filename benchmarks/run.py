@@ -66,8 +66,8 @@ def main() -> None:
 
     from benchmarks import (cohort_scale, convergence, faults_scale,
                             fig1_stragglers, fig2_systems, fig3_faults,
-                            roofline_report, sdca_micro, table1_mtl,
-                            table4_skew)
+                            roofline_report, sdca_micro, serve_bench,
+                            table1_mtl, table4_skew)
     suites = {
         "table1": table1_mtl, "table4": table4_skew,
         "fig1": fig1_stragglers, "fig2": fig2_systems, "fig3": fig3_faults,
@@ -76,6 +76,7 @@ def main() -> None:
         # report consumes (real HLO FLOP/byte rows)
         "sdca": sdca_micro, "roofline": roofline_report,
         "cohort": cohort_scale, "faults": faults_scale,
+        "serve": serve_bench,
     }
     if args.only:
         suites = {k: v for k, v in suites.items() if k in args.only}

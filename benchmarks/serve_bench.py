@@ -1,0 +1,177 @@
+"""Online-serving benchmark: lookup latency vs population size, and
+reader availability while training blocks stream.
+
+Two claims, two gates:
+
+* **p99 flat in m** -- a served prediction is a (B,)-batched gather +
+  searchsorted over the current ``ServedSnapshot``: its cost is a function
+  of the BATCH, not the population.  Growing m from 10^3 to 10^5 (10^6
+  under ``--full``) must leave p99 lookup latency roughly flat; the gate
+  (slowest/fastest p99 <= 3x quick / 6x full) matches the BENCH_cohort
+  scaling discipline, and an O(m) leak into the lookup path blows past it.
+
+* **no reader stall > one swap** -- the refresh row runs a continual
+  ``ServeSession``: training blocks stream in the background publishing a
+  snapshot every fold, while this thread hammers warmed predictions
+  throughout.  Readers never lock against the fold thread, so the worst
+  finish-time staleness any read observes must stay <= 1 swap, and the
+  training outputs must be BIT-IDENTICAL to the same run with serving
+  disabled (the row records both; either failing raises).
+
+Latency is measured per call through ``repro.utils.timing.tick`` (the one
+sanctioned wall clock) with seeded id batches; rows carry the router's
+provenance block from the session's own report.
+
+Writes ``BENCH_serve.json`` via benchmarks/run.py (suite ``serve``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+import repro.api as api
+from repro.cohort import Population, PopulationSpec
+from repro.core import BudgetConfig, Probabilistic
+from repro.utils.timing import tick
+
+BASE = PopulationSpec("serve_bench", m=1000, d=32, n_min=16, n_max=64,
+                      clusters=5)
+
+QUICK_M = (1_000, 10_000, 100_000)
+FULL_M = QUICK_M + (1_000_000,)
+
+#: request batch and sample counts: enough calls for a stable p99 without
+#: dominating the CI smoke
+BATCH = 256
+WARMUP = 20
+REPEATS = 400
+
+ROUNDS = 4
+REFRESH_M = 10_000
+REFRESH_ROUNDS = 8
+
+
+def _build(pop: Population, rounds: int, telemetry: bool = False,
+           overlap: int = 1) -> api.Experiment:
+    reg = Probabilistic(lam=1e-2, sigma2=10.0)
+    return api.Experiment(
+        problem=api.Problem(population=pop),
+        method=api.Method(loss="hinge", regularizers=(reg,), rounds=rounds,
+                          budget=BudgetConfig(passes=1.0)),
+        systems=api.Systems(dropout=0.1),
+        exec=api.Exec(cohort=64, clusters=pop.spec.clusters,
+                      overlap=overlap, telemetry=telemetry),
+        eval=api.Eval(record_every=rounds))
+
+
+def _batches(m: int, n: int) -> np.ndarray:
+    """(n, BATCH) seeded request id batches -- pure in (m, n)."""
+    rng = np.random.default_rng(np.random.SeedSequence([0x73727665, m]))
+    return rng.integers(0, m, size=(n, BATCH), dtype=np.int64)
+
+
+def _latency_row(m: int) -> Dict:
+    """Warm p50/p99 lookup latency against a trained, cache-warm session."""
+    spec = dataclasses.replace(BASE, name=f"serve_bench_{m}", m=m)
+    pop = Population(spec, seed=0)
+    sess = _build(pop, ROUNDS).serve(seed=0)
+    sess.run()  # train inline; final snapshot published and served
+    report = sess.report()
+    X = np.ones((BATCH, spec.d), np.float32)
+    ids = _batches(m, WARMUP + REPEATS)
+    for i in range(WARMUP):
+        sess.predict(ids[i], X)
+    lat = np.empty(REPEATS)
+    for i in range(REPEATS):
+        t0 = tick()
+        sess.predict(ids[WARMUP + i], X)
+        lat[i] = tick() - t0
+    snap = sess.store.current()
+    return {
+        "bench": "serve", "mode": "lookup", "m": m, "batch": BATCH,
+        "repeats": REPEATS,
+        "us_per_call": float(np.percentile(lat, 50) * 1e6),
+        "p50_us": float(np.percentile(lat, 50) * 1e6),
+        "p99_us": float(np.percentile(lat, 99) * 1e6),
+        "snapshot_version": int(snap.version),
+        "cached_clients": int(snap.n_cached),
+        "snapshot_bytes": int(snap.memory_bytes()),
+        "provenance": dict(report.provenance),
+    }
+
+
+def _refresh_row() -> Dict:
+    """Continual-serving availability: warmed reads while blocks stream."""
+    spec = dataclasses.replace(BASE, name=f"serve_bench_{REFRESH_M}",
+                               m=REFRESH_M)
+    pop = Population(spec, seed=0)
+    exp = _build(pop, REFRESH_ROUNDS, telemetry=True, overlap=2)
+    plain = exp.run(seed=0)
+
+    sess = exp.serve(seed=0, serve=api.Serve(publish_every=1))
+    X = np.ones((BATCH, spec.d), np.float32)
+    ids = _batches(REFRESH_M, WARMUP + 1)
+    for i in range(WARMUP):  # compile + device-warm on the prewarm snapshot
+        sess.predict(ids[i], X)
+    lat: List[float] = []
+    sess.start()
+    while sess.result() is None:
+        t0 = tick()
+        sess.predict(ids[WARMUP], X)  # fixed batch shape: no recompiles
+        lat.append(tick() - t0)
+    served = sess.join()
+    report = sess.report()
+
+    identical = (plain.result.history == served.history
+                 and np.array_equal(plain.result.centroids,
+                                    served.centroids)
+                 and np.array_equal(plain.result.assign, served.assign)
+                 and np.array_equal(plain.result.participation,
+                                    served.participation))
+    max_lag = int(sess.predictor.max_version_lag)
+    summary = report.provenance.get("telemetry") or {}
+    reads = int(summary.get("serve_reads", len(lat) + WARMUP))
+    stale = int(summary.get("serve_stale_reads", 0))
+    row = {
+        "bench": "serve", "mode": "refresh", "m": REFRESH_M, "batch": BATCH,
+        "rounds": REFRESH_ROUNDS, "publish_every": 1,
+        "us_per_call": float(np.percentile(lat, 50) * 1e6) if lat else 0.0,
+        "p50_us": float(np.percentile(lat, 50) * 1e6) if lat else 0.0,
+        "p99_us": float(np.percentile(lat, 99) * 1e6) if lat else 0.0,
+        "reads_during_training": len(lat),
+        "snapshot_swaps": int(sess.store.swap_count),
+        "max_version_lag": max_lag,
+        "stale_read_fraction": (stale / reads) if reads else 0.0,
+        "swap_latency_p99_us": float(
+            summary.get("serve_swap_latency_s.p99", 0.0)) * 1e6,
+        "bit_identical": bool(identical),
+        "provenance": dict(report.provenance),
+    }
+    if not identical:
+        raise RuntimeError(
+            "training with serving enabled diverged from serving disabled "
+            "-- the serve tier must be a pure reader")
+    if lat and max_lag > 1:
+        raise RuntimeError(
+            f"reader stalled across {max_lag} snapshot swaps (> 1): warmed "
+            "lookups must never span more than one publish")
+    return row
+
+
+def run(quick: bool = True) -> List[Dict]:
+    ms = QUICK_M if quick else FULL_M
+    rows = [_latency_row(m) for m in ms]
+    # the scaling claim: p99 lookup latency ~flat in m (same discipline --
+    # and the same looser full-mode band -- as the cohort block gate)
+    limit = 3.0 if quick else 6.0
+    slowest = max(r["p99_us"] for r in rows)
+    fastest = min(r["p99_us"] for r in rows)
+    if slowest > limit * fastest:
+        raise RuntimeError(
+            f"serve lookup p99 scales with population size: "
+            f"{[round(r['p99_us'], 1) for r in rows]} us over "
+            f"m={[r['m'] for r in rows]} (limit {limit}x)")
+    rows.append(_refresh_row())
+    return rows

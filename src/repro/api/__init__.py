@@ -21,11 +21,12 @@ config hash).  DESIGN.md section 8 documents the routing rules and the
 Report schema; the legacy entry points (``run_mocha`` & co.) remain as
 deprecated shims over this surface.
 """
-from repro.api.execute import base_provenance, run_experiment
+from repro.api.execute import (base_provenance, run_experiment,
+                               serve_experiment)
 from repro.api.report import PROVENANCE_KEYS, Report
 from repro.api.router import PATHS, RoutePlan, batch_incompatibility, route
 from repro.api.specs import (PROBLEM_KINDS, Eval, Exec, Experiment, Method,
-                             Problem, Systems, as_cohort_config,
+                             Problem, Serve, Systems, as_cohort_config,
                              as_mocha_config, config_fingerprint)
 from repro.core.evaluate import METRICS, EvalReport
 
@@ -36,11 +37,13 @@ __all__ = [
     "Systems",
     "Exec",
     "Eval",
+    "Serve",
     "Report",
     "EvalReport",
     "RoutePlan",
     "route",
     "run_experiment",
+    "serve_experiment",
     "batch_incompatibility",
     "as_mocha_config",
     "as_cohort_config",

@@ -238,13 +238,10 @@ def _run_grid_path(exp: Experiment, seed: Seed, plan: RoutePlan,
 # ---------------------------------------------------------------------------
 
 
-def _run_cohort_path(exp: Experiment, seed: Seed, plan: RoutePlan,
-                     tel: "obs.Telemetry" = obs.NULL_TELEMETRY) -> Report:
-    from repro.cohort.driver import _run_cohort
-    s = _scalar_seed(seed)
-    cfg = as_cohort_config(exp, seed=s)
-    res = _run_cohort(exp.problem.population, exp.method.regularizers[0], cfg,
-                      telemetry=tel)
+def _cohort_report(exp: Experiment, plan: RoutePlan, s: int, res) -> Report:
+    """Report assembly for a finished cohort run -- shared by the batch
+    path (``_run_cohort_path``) and the serving path (``serve_experiment``)
+    so evaluation and provenance are identical either way."""
     evaluation = None
     if exp.eval.holdout_clients > 0:
         evaluation = eval_mod.evaluate_cohort(
@@ -256,3 +253,46 @@ def _run_cohort_path(exp: Experiment, seed: Seed, plan: RoutePlan,
         prov["retries"] = int(res.fault_stats.retries)
         prov["degraded_blocks"] = int(res.fault_stats.degraded_blocks)
     return Report(result=res, provenance=prov, evaluation=evaluation)
+
+
+def _run_cohort_path(exp: Experiment, seed: Seed, plan: RoutePlan,
+                     tel: "obs.Telemetry" = obs.NULL_TELEMETRY) -> Report:
+    from repro.cohort.driver import _run_cohort
+    s = _scalar_seed(seed)
+    cfg = as_cohort_config(exp, seed=s)
+    res = _run_cohort(exp.problem.population, exp.method.regularizers[0], cfg,
+                      telemetry=tel)
+    return _cohort_report(exp, plan, s, res)
+
+
+def serve_experiment(exp: Experiment, seed: Seed = 0,
+                     serve: "Optional[Serve]" = None):
+    """The machinery behind ``Experiment.serve()``: an online
+    :class:`~repro.serve.refresh.ServeSession` over the experiment's cohort
+    run.  Raises for experiments the router would not send down the cohort
+    path -- serving is a population-scale feature.  The session's
+    ``report()`` produces the same evaluation + provenance block (plus
+    telemetry finalization) as ``Experiment.run`` on the finished result.
+    """
+    from repro.api.specs import Serve
+    from repro.serve.refresh import ServeSession
+    spec = serve if serve is not None else Serve()
+    plan = route(exp)
+    if plan.path != "cohort":
+        raise ValueError(
+            "Experiment.serve() needs a population-scale problem (cohort "
+            f"path); the router picked {plan.path!r}"
+            + (f" because {plan.reason}" if plan.reason else ""))
+    tel = obs.telemetry(exp.exec.telemetry or exp.exec.trace_dir is not None)
+    s = _scalar_seed(seed)
+    cfg = as_cohort_config(exp, seed=s)
+
+    def build_report(res) -> Report:
+        report = _cohort_report(exp, plan, s, res)
+        _finalize_telemetry(exp, tel, s, report)
+        return report
+
+    return ServeSession(exp.problem.population, exp.method.regularizers[0],
+                        cfg, publish_every=spec.publish_every,
+                        prewarm=spec.prewarm, telemetry=tel,
+                        report_builder=build_report)

@@ -298,6 +298,28 @@ class Eval:
 
 
 @dataclasses.dataclass(frozen=True)
+class Serve:
+    """Online-serving sub-spec for ``Experiment.serve()``.
+
+    ``publish_every`` is the snapshot refresh cadence in folded blocks (1 =
+    every fold publishes).  ``prewarm`` publishes the deterministic cold
+    state as version 0 before training starts, so predictions are
+    answerable from t=0 (cold clients resolve to their cluster centroid).
+    Serving never changes training: a run with a ``ServeSession`` attached
+    is bit-identical to ``Experiment.run`` -- the same guarantee shape as
+    ``Exec.telemetry``.
+    """
+
+    publish_every: int = 1
+    prewarm: bool = True
+
+    def __post_init__(self):
+        if self.publish_every < 1:
+            raise ValueError(
+                f"need publish_every >= 1 folds, got {self.publish_every}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Experiment:
     """A fully-described experiment; ``run(seed)`` executes and evaluates it.
 
@@ -318,6 +340,16 @@ class Experiment:
     def run(self, seed: Union[int, Sequence[int]] = 0) -> "Report":
         from repro.api.execute import run_experiment
         return run_experiment(self, seed)
+
+    def serve(self, seed: int = 0,
+              serve: Optional[Serve] = None) -> "ServeSession":
+        """An online :class:`~repro.serve.refresh.ServeSession` over this
+        experiment: cohort training streams in the background (``start()``
+        / ``join()``, or inline ``run()``) while ``predict(ids, X)``
+        answers from atomically-swapped snapshots.  Cohort-routed
+        populations only."""
+        from repro.api.execute import serve_experiment
+        return serve_experiment(self, seed, serve)
 
     def route(self) -> "RoutePlan":
         from repro.api.router import route

@@ -91,19 +91,30 @@ class ClusterOmega:
             self._cache_misses.inc(len(ids) - hits)
         return alpha
 
+    def cache_entries(self):  # worker: main
+        """(ids (L,) int64, deltas (L, d) float32) copies of the live LRU
+        cache, least-recent first.  The read-side accessor the serve tier's
+        ``ServedSnapshot.from_state`` consumes -- nobody outside this class
+        touches ``_cache`` directly."""
+        if not self._cache:
+            return (np.zeros(0, np.int64), np.zeros((0, self.d), np.float32))
+        ids = np.fromiter(self._cache.keys(), np.int64, len(self._cache))
+        deltas = np.stack([hit[1] for hit in self._cache.values()])
+        return ids, np.asarray(deltas, np.float32)
+
     def client_weights(self, ids: np.ndarray) -> np.ndarray:  # worker: main
         """(K, d) serving weights: centroid + cached personal delta.
 
         Defined for EVERY client -- never-sampled clients serve their
         cluster centroid, the cold-start answer cross-device systems need.
+        The resolution rule itself lives in ``repro.serve.store`` (one
+        source of truth with the online prediction tier); this delegates
+        through a fresh ``ServedSnapshot`` and stays bit-identical to the
+        historical per-slot loop.
         """
-        ids = np.asarray(ids, np.int64)
-        W = self.centroids[self.assign[ids]].copy()
-        for slot, t in enumerate(ids):
-            hit = self._cache.get(int(t))
-            if hit is not None:
-                W[slot] += hit[1]
-        return W
+        from repro.serve.store import ServedSnapshot  # runtime-lazy: serve
+        # sits ABOVE cohort in the layering; no import cycle at load time
+        return ServedSnapshot.from_state(self).client_weights(ids)
 
     # -- incremental updates from cohort statistics -------------------------
 

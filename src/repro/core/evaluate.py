@@ -171,17 +171,22 @@ def evaluate_cohort(pop, relationship, loss: Loss, n_clients: int,
     """Per-cluster held-out-client evaluation of a cross-device run.
 
     Materializes ``n_clients`` held-out clients (bit-reproducibly, preferring
-    never-trained ones), scores each against its SERVED weights
-    (``ClusterOmega.client_weights``: cluster centroid + cached personal
-    delta -- the cold-start answer a cross-device system actually returns),
-    and aggregates by learned cluster assignment.
+    never-trained ones), scores each against its SERVED weights -- exactly
+    what the online tier would answer: the eval goes through a
+    ``repro.serve.store.ServedSnapshot`` of the relationship state, so the
+    resolution rule (cluster centroid + cached personal delta; bare
+    centroid for cold clients) has ONE source of truth shared with
+    ``repro.serve.predict`` -- and aggregates by learned cluster assignment.
     """
+    from repro.serve.store import ServedSnapshot  # runtime-lazy: serve sits
+    # above core in the layering; the eval is a CONSUMER of the serve tier
     metrics = _check_metrics(metrics)
     ids = holdout_client_ids(pop.m, n_clients, seed, participation)
     if ids.size == 0:
         return EvalReport(per_client={"client": ids},
                           summary={"holdout_clients": 0.0})
-    W = np.asarray(relationship.client_weights(ids), np.float32)
+    snap = ServedSnapshot.from_state(relationship)
+    W = snap.client_weights(ids)
     errs = np.empty(ids.size)
     lvals = np.empty(ids.size)
     sizes = np.empty(ids.size, np.int64)
@@ -192,7 +197,7 @@ def evaluate_cohort(pop, relationship, loss: Loss, n_clients: int,
         lvals[i] = float(jnp.mean(loss.value(jnp.asarray(z),
                                              jnp.asarray(blk.y))))
         sizes[i] = blk.n
-    clusters = np.asarray(relationship.assign)[ids]
+    clusters = np.asarray(snap.assign)[ids]
     table: Dict[str, np.ndarray] = {"client": ids, "cluster": clusters,
                                     "n_holdout": sizes}
     if "error" in metrics:

@@ -34,9 +34,10 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.utils.timing import tick
 
-#: the cohort pipeline's worker roles, in display order; unknown worker
-#: names are legal (export assigns them tracks after these)
-WORKERS = ("main", "pack", "solve")
+#: the known worker roles, in display order: the cohort pipeline's three
+#: stages plus the serve tier's reader role; unknown worker names are
+#: legal (export assigns them tracks after these)
+WORKERS = ("main", "pack", "solve", "serve")
 
 
 @dataclasses.dataclass

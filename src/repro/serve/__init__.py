@@ -1,0 +1,22 @@
+"""repro.serve: online prediction tier over the cross-device training stack.
+
+Layers (read DESIGN.md section 12 for the snapshot lifecycle):
+
+  * :mod:`repro.serve.store`   -- immutable versioned ``ServedSnapshot``,
+    the one served-weight resolution rule, and the atomically-swapped
+    ``SnapshotStore``;
+  * :mod:`repro.serve.predict` -- batched jit-compiled ``Predictor``;
+  * :mod:`repro.serve.refresh` -- ``ServeSession``: continual cohort
+    training in the background, snapshot publish every N folds.
+
+``repro.serve.engine`` (the LM decode demo engine) is deliberately NOT
+re-exported here -- import it directly.  Serve-tier discipline is linted
+(reprolint D107): training state enters only as a ``ServedSnapshot``, and
+serve code draws no RNG and writes no ``SystemsTrace``.
+"""
+from repro.serve.predict import Predictor
+from repro.serve.refresh import ServeSession
+from repro.serve.store import ServedSnapshot, SnapshotStore, resolve_weights
+
+__all__ = ["Predictor", "ServeSession", "ServedSnapshot", "SnapshotStore",
+           "resolve_weights"]

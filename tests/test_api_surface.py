@@ -12,11 +12,11 @@ from repro.cohort.driver import CohortConfig
 from repro.core.mocha import MochaConfig
 
 EXPECTED_ALL = {
-    "Experiment", "Problem", "Method", "Systems", "Exec", "Eval",
+    "Experiment", "Problem", "Method", "Systems", "Exec", "Eval", "Serve",
     "Report", "EvalReport", "RoutePlan", "route", "run_experiment",
-    "batch_incompatibility", "as_mocha_config", "as_cohort_config",
-    "config_fingerprint", "base_provenance", "PATHS", "PROBLEM_KINDS",
-    "PROVENANCE_KEYS", "METRICS",
+    "serve_experiment", "batch_incompatibility", "as_mocha_config",
+    "as_cohort_config", "config_fingerprint", "base_provenance", "PATHS",
+    "PROBLEM_KINDS", "PROVENANCE_KEYS", "METRICS",
 }
 
 EXPECTED_FIELDS = {
@@ -30,6 +30,7 @@ EXPECTED_FIELDS = {
              "max_retries", "degrade", "checkpoint_every", "checkpoint_dir",
              "resume", "telemetry", "trace_dir"),
     "Eval": ("record_every", "holdout", "holdout_clients", "metrics"),
+    "Serve": ("publish_every", "prewarm"),
     "Experiment": ("problem", "method", "systems", "exec", "eval"),
     "RoutePlan": ("path", "driver", "engine", "reason"),
     "Report": ("result", "provenance", "evaluation"),

@@ -486,3 +486,49 @@ def test_cohort_population_scale_100k():
               + 1024 * 4 * (spec.pad_width + 32) + 4096)
     assert state.memory_bytes() <= budget
     assert state.cached_clients <= 1024
+
+
+def test_cluster_omega_snapshot_roundtrip_under_lru_eviction():
+    """snapshot/restore must round-trip the LRU cache bitwise even at
+    capacity with evictions in flight: the restored state and the original
+    stay bit-identical under the SAME further updates -- including which
+    clients get evicted next (eviction ORDER is state too)."""
+    m, k, d, cap, n_pad = 60, 3, 5, 8, 7
+    reg = Probabilistic(lam=1e-2, sigma2=10.0)
+
+    def make_updates(seed, n):
+        rng = np.random.default_rng(seed)
+        ups = []
+        for _ in range(n):
+            ids = np.sort(rng.choice(m, size=6, replace=False)).astype(
+                np.int64)
+            W = rng.normal(size=(6, d)).astype(np.float32)
+            alpha = rng.normal(size=(6, n_pad)).astype(np.float32)
+            sizes = rng.integers(2, n_pad + 1, size=6)
+            part = rng.random(6) < 0.8
+            part[0] = True  # never an all-dropped update
+            ups.append((ids, W, alpha, sizes, part))
+        return ups
+
+    a = ClusterOmega(m, k, d, reg, cache_clients=cap)
+    for u in make_updates(1, 10):
+        a.update(*u)
+    assert a.cached_clients == cap  # at capacity: evictions already ran
+    snap = a.snapshot(n_pad)
+
+    b = ClusterOmega(m, k, d, reg, cache_clients=cap)
+    b.restore_state(snap)
+    for key, val in snap.items():
+        np.testing.assert_array_equal(val, b.snapshot(n_pad)[key],
+                                      err_msg=key)
+
+    # identical future: same updates => same evictions, bit-identical state
+    for u in make_updates(2, 6):
+        a.update(*u)
+        b.update(*u)
+    sa, sb = a.snapshot(n_pad), b.snapshot(n_pad)
+    for key in sa:
+        np.testing.assert_array_equal(sa[key], sb[key], err_msg=key)
+    ids = np.arange(m)
+    np.testing.assert_array_equal(a.client_weights(ids),
+                                  b.client_weights(ids))

@@ -208,6 +208,50 @@ def test_d106_negative(tmp_path):
         """) == []
 
 
+def test_d107_serve_rng_and_state_import_positive(tmp_path):
+    out = _lint(tmp_path, "src/repro/serve/hot.py", """\
+        import jax
+        from repro.cohort.omega import ClusterOmega
+        def sample(key):
+            return jax.random.uniform(key, (4,))
+        """)
+    assert "D107" in _rules(out)
+    d107 = [f for f in out if f.rule == "D107"]
+    assert len(d107) == 2         # the omega import AND the RNG draw
+
+
+def test_d107_serve_trace_write_positive(tmp_path):
+    out = _lint(tmp_path, "src/repro/serve/hot.py", """\
+        def f(trace, ids):
+            trace.begin_round(ids)
+            trace.charge(3)
+        """)
+    assert _rules(out) == ["D107"]
+    assert len(out) == 2
+
+
+def test_d107_negative(tmp_path):
+    # the sanctioned shape: snapshots in, pure lookups out; driving the
+    # training loop through its own API is the refresh loop's job
+    assert _lint(tmp_path, "src/repro/serve/cold.py", """\
+        import numpy as np
+        from repro import obs
+        from repro.serve.store import ServedSnapshot
+        def weights(snap, ids):
+            return snap.client_weights(np.asarray(ids))
+        """) == []
+    # the LM decode engine keeps its seeded sampling (exempt file)
+    assert _lint(tmp_path, "src/repro/serve/engine.py", """\
+        import jax
+        def sample(key, logits):
+            return jax.random.categorical(key, logits)
+        """) == []
+    # outside src/repro/serve D107 does not apply
+    assert _lint(tmp_path, "src/repro/cohort/foo.py", """\
+        from repro.cohort.omega import ClusterOmega
+        """) == []
+
+
 # -- P family ---------------------------------------------------------------
 
 def test_p201_raw_gram_positive(tmp_path):

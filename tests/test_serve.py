@@ -99,3 +99,242 @@ def test_personalization_bridge_end_to_end():
         margin = bridge.predict(params, batches[t], res.W[t])
         accs.append(float(jnp.mean(jnp.sign(margin) == labels[t])))
     assert np.mean(accs) > 0.7, accs
+
+
+# ---------------------------------------------------------------------------
+# online prediction tier: store / predict / refresh (repro.serve)
+# ---------------------------------------------------------------------------
+
+from repro import api  # noqa: E402
+from repro.cohort import (CohortConfig, FaultConfig, Population,  # noqa: E402
+                          PopulationSpec)
+from repro.cohort.driver import _run_cohort  # noqa: E402
+from repro.core.evaluate import evaluate_cohort, holdout_client_ids  # noqa: E402
+from repro.core.losses import get_loss  # noqa: E402
+from repro.serve import (Predictor, ServedSnapshot, ServeSession,  # noqa: E402
+                         SnapshotStore)
+from repro.serve.store import SENTINEL  # noqa: E402
+
+POP_SPEC = PopulationSpec("t_serve", m=240, d=10, n_min=8, n_max=20,
+                          clusters=3)
+REG = Probabilistic(lam=1e-2, sigma2=10.0)
+
+
+def _cfg(**kw):
+    base = dict(rounds=6, cohort=12, clusters=3, dropout=0.2,
+                omega_update_every=2, record_every=1, seed=1,
+                inner=MochaConfig(budget=BudgetConfig(passes=1.0)))
+    base.update(kw)
+    return CohortConfig(**base)
+
+
+def _trained_state(**kw):
+    pop = Population(POP_SPEC, seed=0)
+    return pop, _run_cohort(pop, REG, _cfg(**kw))
+
+
+def _inline_rule(state, ids):
+    """The historical served-weight rule, inlined: the regression anchor
+    every serve-tier path must match bit-for-bit."""
+    ids = np.asarray(ids, np.int64)
+    W = state.centroids[state.assign[ids]].copy()
+    for slot, t in enumerate(ids):
+        hit = state._cache.get(int(t))
+        if hit is not None:
+            W[slot] += hit[1]
+    return W
+
+
+def test_snapshot_resolution_matches_inline_rule():
+    _, res = _trained_state()
+    state = res.relationship
+    ids = np.arange(state.m)
+    snap = ServedSnapshot.from_state(state, version=3, folded_through=5)
+    assert snap.version == 3 and snap.folded_through == 5
+    assert snap.n_cached == state.cached_clients
+    np.testing.assert_array_equal(snap.client_weights(ids),
+                                  _inline_rule(state, ids))
+    # ClusterOmega.client_weights delegates to the SAME rule
+    np.testing.assert_array_equal(state.client_weights(ids),
+                                  _inline_rule(state, ids))
+
+
+def test_snapshot_from_checkpoint_dict_matches_live():
+    _, res = _trained_state()
+    state = res.relationship
+    ids = np.arange(state.m)
+    snap = ServedSnapshot.from_snapshot(state.snapshot(POP_SPEC.pad_width))
+    np.testing.assert_array_equal(snap.client_weights(ids),
+                                  _inline_rule(state, ids))
+    assert snap.cache_ids.shape == (state.cache_clients,)
+    pad = snap.cache_ids[snap.n_cached:]
+    assert (pad == SENTINEL).all()
+
+
+def test_snapshot_rejects_out_of_range_ids():
+    _, res = _trained_state()
+    snap = ServedSnapshot.from_state(res.relationship)
+    with pytest.raises(ValueError, match="client ids"):
+        snap.client_weights([0, snap.m])
+    with pytest.raises(ValueError, match="client ids"):
+        snap.client_weights([-1])
+
+
+def test_store_swaps_atomically_and_requires_publish():
+    store = SnapshotStore()
+    with pytest.raises(RuntimeError, match="no ServedSnapshot"):
+        store.current()
+    assert store.version == -1
+    _, res = _trained_state()
+    a = ServedSnapshot.from_state(res.relationship, version=0)
+    b = ServedSnapshot.from_state(res.relationship, version=1,
+                                  folded_through=5)
+    store.publish(a)
+    assert store.current() is a and store.version == 0
+    store.publish(b)
+    assert store.current() is b and store.version == 1
+    assert store.swap_count == 2
+
+
+def test_predictor_matches_host_lookup():
+    _, res = _trained_state()
+    state = res.relationship
+    store = SnapshotStore()
+    store.publish(ServedSnapshot.from_state(state, version=0))
+    pred = Predictor(store)
+    ids = np.arange(state.m)
+    W_dev = pred.lookup(ids)
+    np.testing.assert_array_equal(W_dev, _inline_rule(state, ids))
+    # margins agree with the f32 dot against the same weights
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(state.m, state.d)).astype(np.float32)
+    z = pred.predict(ids, X)
+    np.testing.assert_allclose(z, np.einsum("bd,bd->b", W_dev, X),
+                               rtol=1e-5, atol=1e-6)
+    assert pred.snapshot_version == 0
+    with pytest.raises(ValueError, match="client ids"):
+        pred.predict([state.m], X[:1])
+
+
+def test_serve_session_prewarm_serves_cold_centroids():
+    """Predictions are answerable BEFORE any training block folds: the
+    version-0 snapshot is the deterministic cold state."""
+    pop = Population(POP_SPEC, seed=0)
+    sess = ServeSession(pop, REG, _cfg(), publish_every=2)
+    assert sess.snapshot_version == 0
+    ids = np.arange(16)
+    np.testing.assert_array_equal(sess.client_weights(ids),
+                                  np.zeros((16, POP_SPEC.d), np.float32))
+    z = sess.predict(ids, np.ones((16, POP_SPEC.d), np.float32))
+    np.testing.assert_array_equal(z, np.zeros(16, np.float32))
+
+
+def test_serve_session_publish_cadence():
+    pop = Population(POP_SPEC, seed=0)
+    sess = ServeSession(pop, REG, _cfg(rounds=6), publish_every=2)
+    res = sess.run()
+    # prewarm (v0) + folds 1, 3, 5 -> versions 1, 2, 3
+    assert sess.snapshot_version == 3
+    snap = sess.store.current()
+    assert snap.folded_through == 5
+    # the served state IS the final training state
+    np.testing.assert_array_equal(
+        sess.client_weights(np.arange(pop.m)),
+        _inline_rule(res.relationship, np.arange(pop.m)))
+    with pytest.raises(ValueError, match="publish_every"):
+        ServeSession(pop, REG, _cfg(), publish_every=0)
+
+
+def test_serve_bit_identity_concurrent_reads_faulty_overlapped():
+    """Satellite: serving on vs off is bit-identical for every training
+    output -- even under an overlapped, faulty, degrading run with a reader
+    thread hammering predictions throughout (same guarantee shape as
+    Exec.telemetry)."""
+    pop = Population(POP_SPEC, seed=0)
+    kw = dict(overlap=2, staleness=1, max_retries=1, degrade=True,
+              faults=FaultConfig(solve_fail_prob=0.3, seed=3))
+    plain = _run_cohort(pop, REG, _cfg(**kw))
+
+    sess = ServeSession(pop, REG, _cfg(**kw), publish_every=1)
+    ids = np.arange(32)
+    X = np.ones((32, POP_SPEC.d), np.float32)
+    sess.predict(ids, X)  # warm the jit path on the prewarm snapshot
+    sess.start()
+    reads, versions = 0, []
+    while sess.result() is None:
+        versions.append(int(sess.store.current().version))
+        sess.predict(ids, X)
+        reads += 1
+    served = sess.join()
+    # availability: every read answered, versions only move forward, and a
+    # post-join read serves the final snapshot (readers never stall on a
+    # swap -- they always see the latest PUBLISHED version instantly)
+    assert reads > 0
+    assert all(a <= b for a, b in zip(versions, versions[1:]))
+    final_rule = _inline_rule(served.relationship, ids)
+    np.testing.assert_array_equal(sess.client_weights(ids), final_rule)
+
+    assert plain.history == served.history
+    np.testing.assert_array_equal(plain.centroids, served.centroids)
+    np.testing.assert_array_equal(plain.omega_k, served.omega_k)
+    np.testing.assert_array_equal(plain.assign, served.assign)
+    np.testing.assert_array_equal(plain.participation, served.participation)
+    assert plain.fault_stats.retries == served.fault_stats.retries
+    assert (plain.fault_stats.degraded_blocks
+            == served.fault_stats.degraded_blocks)
+
+
+def test_evaluate_cohort_serves_through_snapshot_bit_identical():
+    """Satellite: the held-out eval consumes the serve lookup; its output
+    is bit-identical to the historical inline centroid+delta rule."""
+    pop, res = _trained_state()
+    state = res.relationship
+    loss = get_loss("hinge")
+    rep = evaluate_cohort(pop, state, loss, 25, seed=3,
+                          participation=res.participation)
+    ids = holdout_client_ids(pop.m, 25, 3, res.participation)
+    W = _inline_rule(state, ids)
+    errs = np.empty(ids.size)
+    for i, t in enumerate(ids):
+        blk = pop.client_block(int(t))
+        z = blk.X @ W[i]
+        errs[i] = float(np.mean(np.sign(z) != np.sign(blk.y)))
+    np.testing.assert_array_equal(rep.per_client["client"], ids)
+    np.testing.assert_array_equal(rep.per_client["error"], errs)
+    np.testing.assert_array_equal(rep.per_client["cluster"],
+                                  np.asarray(state.assign)[ids])
+
+
+def test_experiment_serve_api_surface():
+    pop = Population(POP_SPEC, seed=0)
+    reg = Probabilistic(lam=1e-2, sigma2=10.0)
+    exp = api.Experiment(
+        problem=api.Problem(population=pop),
+        method=api.Method(regularizers=(reg,), rounds=4,
+                          budget=BudgetConfig(passes=1.0)),
+        exec=api.Exec(cohort=12, clusters=3),
+        eval=api.Eval(record_every=1, holdout_clients=20))
+    sess = exp.serve(seed=1, serve=api.Serve(publish_every=2))
+    res = sess.run()
+    report = sess.report()
+    # the session's report is the SAME report Experiment.run() produces
+    batch = exp.run(seed=1)
+    assert report.result.history == batch.result.history
+    np.testing.assert_array_equal(report.evaluation.per_client["error"],
+                                  batch.evaluation.per_client["error"])
+    assert report.provenance["path"] == "cohort"
+    assert res is sess.result()
+
+    # non-cohort problems are rejected up front
+    from repro.data.synthetic import tiny_problem
+    train, _ = tiny_problem(m=4, n=16, d=6, seed=0)
+    single = api.Experiment(
+        problem=api.Problem(train=train),
+        method=api.Method(regularizers=(reg,), rounds=2))
+    with pytest.raises(ValueError, match="cohort"):
+        single.serve()
+
+
+def test_serve_spec_validation():
+    with pytest.raises(ValueError, match="publish_every"):
+        api.Serve(publish_every=0)

@@ -6,7 +6,9 @@ Static pass (D/P/T/U families, stdlib-only, sub-second, never imports
 jax) over the given files/directories; exits 1 on any finding not in the
 baseline.  ``--quickstart`` additionally (or, with no paths, exclusively)
 runs the dynamic W401 quickstart-deprecation gate, which executes
-``examples/quickstart.py`` and therefore imports jax.
+``examples/quickstart.py`` -- plus any ``--quickstart-target SCRIPT``
+entry points (e.g. ``examples/serve_lm.py``) -- and therefore imports
+jax.
 
     --write-baseline   accept the current findings as the new baseline
     --report F.json    machine-readable findings report (CI artifact)
@@ -52,7 +54,9 @@ def _iter_py_files(paths: List[Path]) -> List[Path]:
 
 
 def run_paths(root: Path, paths: List[Path],
-              run_quickstart: bool = False) -> List[Finding]:
+              run_quickstart: bool = False,
+              quickstart_targets: Optional[List[Path]] = None
+              ) -> List[Finding]:
     """All (non-inline-suppressed) findings for ``paths`` under ``root``."""
     files = _iter_py_files(paths)
     findings: List[Finding] = []
@@ -68,10 +72,16 @@ def run_paths(root: Path, paths: List[Path],
         findings.extend(f for f in graph.check_unreachable(root)
                         if f.path in scanned)
     if run_quickstart:
-        w_findings, notes = quickstart.check_quickstart(root)
-        for note in notes:
-            print(f"note: third-party DeprecationWarning ({note})")
-        findings.extend(w_findings)
+        # the default quickstart, then any extra entry-point scripts (e.g.
+        # examples/serve_lm.py) under the same W401 deprecation gate
+        targets: List[Optional[Path]] = [None]
+        targets.extend(quickstart_targets or [])
+        for target in targets:
+            w_findings, notes = quickstart.check_quickstart(root,
+                                                            target=target)
+            for note in notes:
+                print(f"note: third-party DeprecationWarning ({note})")
+            findings.extend(w_findings)
     return findings
 
 
@@ -104,6 +114,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--quickstart", action="store_true",
                     help="also run the dynamic W401 quickstart gate "
                          "(imports jax)")
+    ap.add_argument("--quickstart-target", action="append", default=[],
+                    metavar="SCRIPT",
+                    help="additional entry-point script(s) to execute under "
+                         "the W401 gate alongside examples/quickstart.py "
+                         "(requires --quickstart; repeatable)")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
@@ -119,7 +134,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if missing:
         ap.error(f"no such path: {', '.join(map(str, missing))}")
 
-    findings = run_paths(root, paths, run_quickstart=args.quickstart)
+    findings = run_paths(
+        root, paths, run_quickstart=args.quickstart,
+        quickstart_targets=[Path(p) for p in args.quickstart_target])
 
     baseline_path = (Path(args.baseline) if args.baseline
                      else DEFAULT_BASELINE)

@@ -33,9 +33,16 @@ def check_quickstart(root: pathlib.Path = REPO_ROOT,
                      ) -> Tuple[List[Finding], List[str]]:
     """(first-party DeprecationWarning findings, third-party notes)."""
     target = target or (root / "examples" / "quickstart.py")
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        runpy.run_path(str(target), run_name="__main__")
+    # targets run as __main__ and may parse sys.argv (e.g. serve_lm.py);
+    # hide this CLI's own flags from them for the duration of the run
+    saved_argv = sys.argv
+    sys.argv = [str(target)]
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            runpy.run_path(str(target), run_name="__main__")
+    finally:
+        sys.argv = saved_argv
     findings: List[Finding] = []
     notes: List[str] = []
     for w in caught:

@@ -376,6 +376,60 @@ class D106TelemetryDiscipline(Rule):
                     "metrics only through a Telemetry view")
 
 
+class D107ServeReadOnly(Rule):
+    id = "D107"
+    summary = ("serve-tier discipline: serving code only READS training "
+               "state, and only through ServedSnapshot -- no RNG draws, no "
+               "SystemsTrace writes, no mutable ClusterOmega import")
+    hint = ("consume training state as a repro.serve.store.ServedSnapshot "
+            "(published by the refresh loop); a prediction must be a pure "
+            "function of (snapshot, ids, X) so serving can never perturb "
+            "or race the training run (DESIGN.md section 12)")
+    scope = ("src/repro/serve/*",)
+    #: the LM decode demo engine samples tokens from its own seeded
+    #: stream -- generation randomness, not training state
+    exempt = ("src/repro/serve/engine.py",)
+
+    #: any draw would make served answers depend on request order
+    RNG_PREFIXES = ("jax.random.", "numpy.random.")
+    #: the SystemsTrace mutation surface (simulated-clock writes belong to
+    #: the solve worker, never to serving)
+    TRACE_MUTATORS = {"begin_round", "commit", "charge", "set_rate_scale",
+                      "replay"}
+    #: the mutable training state; serve sees it only via ServedSnapshot
+    BANNED_MODULE = "repro.cohort.omega"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == self.BANNED_MODULE:
+                        yield ctx.finding(
+                            self, node,
+                            f"import of mutable training state module "
+                            f"`{a.name}`; serve reads ServedSnapshot only")
+            elif (isinstance(node, ast.ImportFrom) and node.level == 0
+                    and node.module == self.BANNED_MODULE):
+                yield ctx.finding(
+                    self, node,
+                    f"import from mutable training state module "
+                    f"`{node.module}`; serve reads ServedSnapshot only")
+        for node, name in self._calls(ctx):
+            if name.startswith(self.RNG_PREFIXES):
+                yield ctx.finding(
+                    self, node, f"RNG draw `{name}` in serve code; served "
+                    "answers must be pure in (snapshot, ids, X)")
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self.TRACE_MUTATORS
+                    and not ctx.suppressed(node.lineno, self.id)):
+                yield ctx.finding(
+                    self, node,
+                    f"trace-mutator call `.{node.func.attr}(...)` in serve "
+                    "code; the SystemsTrace clock is training-owned")
+
+
 class D105SilentFaultSwallow(Rule):
     id = "D105"
     summary = ("silent fault swallowing; failures must be retried, "
@@ -559,7 +613,7 @@ class P204LegacyEntryCall(Rule):
 
 
 class _OwnershipRule(Rule):
-    scope = ("src/repro/cohort/*",)
+    scope = ("src/repro/cohort/*", "src/repro/serve/*")
 
     def _comment_in_span(self, ctx: FileContext, lo: int, hi: int,
                          pat: "re.Pattern") -> Optional[str]:
@@ -700,7 +754,7 @@ class T302UntaggedOwnedWrite(_OwnershipRule):
 ALL_RULES: Tuple[Rule, ...] = (
     D101WallClockRead(), D102StdlibRandom(), D103UnseededNumpyRng(),
     D104BenchProvenanceTime(), D105SilentFaultSwallow(),
-    D106TelemetryDiscipline(),
+    D106TelemetryDiscipline(), D107ServeReadOnly(),
     P201RawSelfGram(), P202ManualRowReduction(),
     P203ScanHostMaterialization(), P204LegacyEntryCall(),
     T301WrongWorkerAccess(), T302UntaggedOwnedWrite(),
